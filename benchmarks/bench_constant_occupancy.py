@@ -1,0 +1,72 @@
+"""Constant Occupancy benchmark (paper Fig. 11 — the paper's own test).
+
+Each actor pre-allocates a pool of chunks with a size distribution
+skewed towards small chunks (more allocations at smaller sizes), then
+performs OPS random deallocate-reallocate pairs at the *same* size —
+keeping the occupancy factor of the buddy system constant while
+exercising splits/merges at many levels.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    WIDTHS,
+    WavefrontAllocator,
+    level_for,
+    make_host_allocators,
+    row,
+)
+
+TOTAL_MEM = 1 << 19
+MIN_SIZE = 8
+# skewed pool: many small, few large (paper: min sizes 8..1024, max 16x)
+POOL_SPEC = [(8, 128), (16, 64), (32, 32), (64, 16), (128, 8), (1024, 4)]
+OPS = 20_000
+
+
+def run() -> None:
+    units_total = TOTAL_MEM // MIN_SIZE
+    rng = np.random.default_rng(1)
+
+    for name, alloc in make_host_allocators(TOTAL_MEM, MIN_SIZE).items():
+        pool = []
+        for size, count in POOL_SPEC:
+            for _ in range(count):
+                a = alloc.nb_alloc(size)
+                if a is not None:
+                    pool.append((a, size))
+        t0 = time.perf_counter()
+        for _ in range(OPS // 2):
+            i = int(rng.integers(len(pool)))
+            addr, size = pool[i]
+            alloc.nb_free(addr)
+            pool[i] = (alloc.nb_alloc(size), size)
+        dt = time.perf_counter() - t0
+        row("constant_occupancy", name, 1, OPS, dt)
+
+    for w in WIDTHS:
+        wa = WavefrontAllocator(units_total, w)
+        pool = []
+        for size, count in POOL_SPEC:
+            for _ in range(max(count // w, 1)):
+                lv = np.full(w, level_for(units_total, size // MIN_SIZE),
+                             np.int32)
+                pool.append((wa.alloc_batch(lv), lv))
+        wa.block()
+        t0 = time.perf_counter()
+        for _ in range(OPS // (2 * w)):
+            i = int(rng.integers(len(pool)))
+            nodes, lv = pool[i]
+            wa.free_batch_(nodes)
+            pool[i] = (wa.alloc_batch(lv), lv)
+        wa.block()
+        dt = time.perf_counter() - t0
+        row("constant_occupancy", "nb-wavefront", w, OPS, dt)
+
+
+if __name__ == "__main__":
+    run()

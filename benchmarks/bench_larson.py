@@ -1,0 +1,75 @@
+"""Larson benchmark (paper Fig. 10; Larson & Krishnan [23]).
+
+Server-style behaviour: a working set of slots; each operation frees a
+random slot and allocates a new random-sized chunk into it.  Throughput
+over a fixed time window.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    WIDTHS,
+    WavefrontAllocator,
+    level_for,
+    make_host_allocators,
+    row,
+)
+
+TOTAL_MEM = 1 << 19
+MIN_SIZE = 8
+SIZES = [8, 16, 32, 64, 128, 256, 512, 1024]
+SLOTS = 256
+WINDOW_S = 1.0
+
+
+def run() -> None:
+    units_total = TOTAL_MEM // MIN_SIZE
+    rng = np.random.default_rng(0)
+
+    for name, alloc in make_host_allocators(TOTAL_MEM, MIN_SIZE).items():
+        slots = [alloc.nb_alloc(int(rng.choice(SIZES))) for _ in range(SLOTS)]
+        ops = 0
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < WINDOW_S:
+            for _ in range(200):
+                i = int(rng.integers(SLOTS))
+                if slots[i] is not None:
+                    alloc.nb_free(slots[i])
+                slots[i] = alloc.nb_alloc(int(rng.choice(SIZES)))
+                ops += 2
+        dt = time.perf_counter() - t0
+        row("larson", name, 1, ops, dt)
+
+    for w in WIDTHS:
+        wa = WavefrontAllocator(units_total, w)
+        # working set as node batches
+        held = []
+        for _ in range(SLOTS // w):
+            lv = np.asarray(
+                [level_for(units_total, int(rng.choice(SIZES)) // MIN_SIZE)
+                 for _ in range(w)], np.int32)
+            held.append(wa.alloc_batch(lv))
+        wa.block()
+        ops = 0
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < WINDOW_S:
+            for _ in range(20):
+                i = int(rng.integers(len(held)))
+                wa.free_batch_(held[i])
+                lv = np.asarray(
+                    [level_for(units_total,
+                               int(rng.choice(SIZES)) // MIN_SIZE)
+                     for _ in range(w)], np.int32)
+                held[i] = wa.alloc_batch(lv)
+                ops += 2 * w
+        wa.block()
+        dt = time.perf_counter() - t0
+        row("larson", "nb-wavefront", w, ops, dt)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Linux Scalability benchmark (paper Fig. 8; Lever & Boreham [22]).
+
+Each of W concurrent actors performs OPS/W fixed-size alloc-then-free
+iterations.  Lock-equivalent allocators serialize everything; the
+non-blocking wavefront commits W-wide batches per round.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    WIDTHS,
+    WavefrontAllocator,
+    level_for,
+    make_host_allocators,
+    row,
+)
+
+TOTAL_MEM = 1 << 19     # bytes managed
+MIN_SIZE = 8
+ALLOC_SIZE = 64         # fixed request size
+OPS = 20_000            # scaled 1000x down from the paper's 20M
+
+
+def run() -> None:
+    units_total = TOTAL_MEM // MIN_SIZE
+
+    # --- host allocators (sequential = lock-equivalent cost model) -----
+    for name, alloc in make_host_allocators(TOTAL_MEM, MIN_SIZE).items():
+        t0 = time.perf_counter()
+        for _ in range(OPS // 2):
+            a = alloc.nb_alloc(ALLOC_SIZE)
+            alloc.nb_free(a)
+        dt = time.perf_counter() - t0
+        row("linux_scalability", name, 1, OPS, dt)
+
+    # --- wavefront: width-W batches of alloc then free ------------------
+    level = level_for(units_total, ALLOC_SIZE // MIN_SIZE)
+    for w in WIDTHS:
+        wa = WavefrontAllocator(units_total, w)
+        levels = np.full(w, level, np.int32)
+        # narrow widths: cap op count (jit-dispatch-bound on CPU; the
+        # scaling trend is the measurement, not the absolute count)
+        ops_w = OPS if w >= 8 else min(OPS, 4_000)
+        n_batches = ops_w // (2 * w)
+        # warmup/compile
+        nodes = wa.alloc_batch(levels)
+        wa.free_batch_(nodes)
+        wa.block()
+        t0 = time.perf_counter()
+        for _ in range(n_batches):
+            nodes = wa.alloc_batch(levels)
+            wa.free_batch_(nodes)
+        wa.block()
+        dt = time.perf_counter() - t0
+        row("linux_scalability", "nb-wavefront", w, n_batches * 2 * w, dt)
+        del wa
+
+
+if __name__ == "__main__":
+    run()

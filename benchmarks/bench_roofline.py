@@ -1,0 +1,48 @@
+"""Roofline table generator: aggregates the dry-run cell JSONs into the
+EXPERIMENTS.md §Roofline table (single-pod mesh per the spec; the
+multi-pod pass proves the 'pod' axis shards)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh="single"):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c) -> str:
+    if c.get("status") == "skipped":
+        return (f"{c['arch']},{c['shape']},{c['mesh']},skipped,,,,,,,"
+                f"\"{c['reason'][:60]}\"")
+    if c.get("status") != "ok":
+        return f"{c['arch']},{c['shape']},{c['mesh']},FAIL,,,,,,,"
+    r = c["roofline"]
+    w = c["hlo_walk_per_device"]
+    return (
+        f"{c['arch']},{c['shape']},{c['mesh']},ok,"
+        f"{r['compute_s']:.4e},{r['memory_s']:.4e},{r['collective_s']:.4e},"
+        f"{r['dominant']},{c['model_flops_global']:.3e},"
+        f"{(c['useful_flops_ratio'] or 0):.3f},"
+        f"coll_ag={w['per_collective'].get('all-gather', 0):.2e}"
+    )
+
+
+def run() -> None:
+    print("arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+          "dominant,model_flops,useful_ratio,extra")
+    for mesh in ("single", "multi"):
+        for c in load_cells(mesh):
+            print(fmt_row(c))
+
+
+if __name__ == "__main__":
+    run()

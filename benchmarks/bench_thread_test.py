@@ -1,0 +1,65 @@
+"""Thread Test benchmark (paper Fig. 9; Berger et al. Hoard [17]).
+
+Each actor performs N/W allocations of a fixed size, then releases all
+of them, repeating for CYCLES rounds.  Exercises batch-alloc-then-
+batch-free — the regime where the paper observed the 4-level (bunch)
+organization winning.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    WIDTHS,
+    WavefrontAllocator,
+    level_for,
+    make_host_allocators,
+    row,
+)
+
+TOTAL_MEM = 1 << 19
+MIN_SIZE = 8
+ALLOC_SIZE = 64
+N_ALLOCS = 1_000  # paper: 10000/num_threads; scaled
+CYCLES = 10
+
+
+def run() -> None:
+    units_total = TOTAL_MEM // MIN_SIZE
+    batch = min(N_ALLOCS, (TOTAL_MEM // ALLOC_SIZE) // 2)
+
+    for name, alloc in make_host_allocators(TOTAL_MEM, MIN_SIZE).items():
+        t0 = time.perf_counter()
+        for _ in range(CYCLES):
+            addrs = [alloc.nb_alloc(ALLOC_SIZE) for _ in range(batch)]
+            for a in addrs:
+                if a is not None:
+                    alloc.nb_free(a)
+        dt = time.perf_counter() - t0
+        row("thread_test", name, 1, CYCLES * 2 * batch, dt)
+
+    level = level_for(units_total, ALLOC_SIZE // MIN_SIZE)
+    for w in WIDTHS:
+        wa = WavefrontAllocator(units_total, w)
+        levels = np.full(w, level, np.int32)
+        nodes = wa.alloc_batch(levels)
+        wa.free_batch_(nodes)
+        wa.block()
+        t0 = time.perf_counter()
+        for _ in range(CYCLES):
+            held = []
+            for _ in range(batch // w):
+                held.append(wa.alloc_batch(levels))
+            for nodes in held:
+                wa.free_batch_(nodes)
+        wa.block()
+        dt = time.perf_counter() - t0
+        row("thread_test", "nb-wavefront", w,
+            CYCLES * 2 * (batch // w) * w, dt)
+
+
+if __name__ == "__main__":
+    run()

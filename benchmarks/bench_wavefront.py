@@ -1,0 +1,73 @@
+"""Wavefront scaling on the device substrate: arbitration rounds and
+merged word-updates vs width, on empty and fragmented trees — the
+structural (hardware-independent) scalability evidence that complements
+the wall-clock Figs 8-11 analogues."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.concurrent import TreeConfig, free_batch, wavefront_alloc
+
+DEPTH = 14  # 16K units
+
+
+def run() -> None:
+    cfg = TreeConfig(depth=DEPTH, max_level=0)
+    rng = np.random.default_rng(3)
+
+    for width in (1, 4, 16, 64, 256):
+        levels = jnp.asarray(
+            rng.integers(DEPTH - 6, DEPTH + 1, size=width), jnp.int32
+        )
+        # compile
+        tree, nodes, ok, stats = wavefront_alloc(
+            cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
+        )
+        jax.block_until_ready(tree)
+        t0 = time.perf_counter()
+        REPS = 20
+        for _ in range(REPS):
+            tree, nodes, ok, stats = wavefront_alloc(
+                cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
+            )
+        jax.block_until_ready(tree)
+        dt = time.perf_counter() - t0
+        row(
+            "wavefront_scaling", "nb-wavefront", width, REPS * width, dt,
+            extra=(
+                f"rounds={int(stats['rounds'])};"
+                f"merged={int(stats['merged_writes'])};"
+                f"logical={int(stats['logical_rmws'])}"
+            ),
+        )
+
+    # fragmented-tree behaviour: occupancy ~50% at mixed levels
+    tree = cfg.empty_tree()
+    lv = jnp.asarray(rng.integers(6, DEPTH + 1, size=512), jnp.int32)
+    tree, nodes, ok, _ = wavefront_alloc(cfg, tree, lv, jnp.ones(512, bool))
+    tree, _ = free_batch(cfg, tree, nodes[::2], jnp.ones(256, bool))
+    for width in (16, 64):
+        levels = jnp.asarray(
+            rng.integers(DEPTH - 4, DEPTH + 1, size=width), jnp.int32
+        )
+        t1, n1, ok1, stats = wavefront_alloc(
+            cfg, tree, levels, jnp.ones(width, bool)
+        )
+        jax.block_until_ready(t1)
+        row(
+            "wavefront_fragmented", "nb-wavefront", width, width, 1e-9,
+            extra=(
+                f"rounds={int(stats['rounds'])};ok={int(ok1.sum())};"
+                f"merged={int(stats['merged_writes'])}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

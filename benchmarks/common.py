@@ -1,0 +1,103 @@
+"""Shared benchmark harness utilities.
+
+All benchmarks emit CSV rows: name,allocator,width,ops,seconds,
+ops_per_sec,extra.  "width" is the wavefront width — the concurrency
+axis that maps the paper's thread count onto this substrate
+(DESIGN.md §2): lock-based allocators serialize a width-W batch,
+the non-blocking wavefront commits it in a handful of arbitration
+rounds.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import FreeListBuddy, SpinlockTreeBuddy
+from repro.core.bunch import BunchBuddy
+from repro.core.concurrent import TreeConfig, free_batch, wavefront_alloc
+from repro.core.ref import NBBSRef
+
+WIDTHS = (1, 2, 4, 8, 16, 32)
+
+
+def row(name, allocator, width, ops, seconds, extra=""):
+    out = (
+        f"{name},{allocator},{width},{ops},{seconds:.4f},"
+        f"{ops / max(seconds, 1e-9):.0f},{extra}"
+    )
+    print(out)
+    return out
+
+
+class WavefrontAllocator:
+    """Batched non-blocking allocator (width-W wavefronts, jitted)."""
+
+    name = "nb-wavefront"
+
+    def __init__(self, total_units: int, width: int):
+        self.cfg = TreeConfig(depth=(total_units - 1).bit_length(), max_level=0)
+        self.tree = self.cfg.empty_tree()
+        self.width = width
+        self.total_units = total_units
+
+    def alloc_batch(self, levels: np.ndarray) -> np.ndarray:
+        lv = jnp.asarray(levels, jnp.int32)
+        self.tree, nodes, ok, _ = wavefront_alloc(
+            self.cfg, self.tree, lv, jnp.ones(len(levels), bool)
+        )
+        return np.asarray(nodes)
+
+    def free_batch_(self, nodes: np.ndarray) -> None:
+        self.tree, _ = free_batch(
+            self.cfg,
+            self.tree,
+            jnp.asarray(nodes, jnp.int32),
+            jnp.asarray(nodes > 0),
+        )
+
+    def block(self):
+        jax.block_until_ready(self.tree)
+
+
+def level_for(total_units: int, units: int) -> int:
+    """Tree level serving an allocation of `units` units (paper rule A5)."""
+    depth = (total_units - 1).bit_length()
+    units = max(units, 1)
+    need = 1 << (units - 1).bit_length()  # round up to power of two
+    return depth - (need.bit_length() - 1)
+
+
+def make_host_allocators(total_memory: int, min_size: int):
+    """The paper's comparison set (host-side, sequential execution)."""
+    return {
+        "1lvl-nb-seq": NBBSRef(total_memory, min_size),          # our tree, sequential
+        "1lvl-sl": SpinlockTreeBuddy(total_memory, min_size),    # + global lock
+        "4lvl-nb-seq": BunchBuddy(total_memory, min_size, bunch_levels=4,
+                                  word_bits=64),
+        "list-buddy-sl": FreeListBuddy(total_memory, min_size),  # Linux-style
+    }
+
+
+def time_host_trace(alloc, trace: Iterable, min_size: int) -> float:
+    """Replays (op, arg) trace: ('a', size) / ('f', key). Returns secs."""
+    live = {}
+    t0 = time.perf_counter()
+    for op, arg in trace:
+        if op == "a":
+            a = alloc.nb_alloc(arg)
+            if a is not None:
+                live[len(live) + 1] = a
+        else:
+            if live:
+                k = next(iter(live)) if arg is None else arg
+                if k in live:
+                    alloc.nb_free(live.pop(k))
+    t1 = time.perf_counter()
+    for a in live.values():
+        alloc.nb_free(a)
+    return t1 - t0

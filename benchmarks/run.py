@@ -1,0 +1,58 @@
+"""Benchmark runner: one benchmark per paper table/figure + the
+framework-level integrations.  Prints CSV:
+name,allocator,width,ops,seconds,ops_per_sec,extra
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    bench_backend_comparison,
+    bench_bunch_rmw,
+    bench_constant_occupancy,
+    bench_larson,
+    bench_linux_scalability,
+    bench_paged_serving,
+    bench_roofline,
+    bench_thread_test,
+    bench_wavefront,
+)
+
+ALL = {
+    "linux_scalability": bench_linux_scalability.run,   # paper Fig. 8
+    "thread_test": bench_thread_test.run,               # paper Fig. 9
+    "larson": bench_larson.run,                         # paper Fig. 10
+    "constant_occupancy": bench_constant_occupancy.run, # paper Fig. 11
+    "backend_comparison": bench_backend_comparison.run, # paper Fig. 12
+    "bunch_rmw": bench_bunch_rmw.run,                   # paper §III-D
+    "wavefront": bench_wavefront.run,                   # device substrate
+    "paged_serving": bench_paged_serving.run,           # NBBS integration
+    "roofline": bench_roofline.run,                     # §Roofline tables
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,allocator,width,ops,seconds,ops_per_sec,extra")
+    failures = 0
+    for name, fn in ALL.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception as e:
+            failures += 1
+            print(f"# FAILED {name}: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Train a tiny LM end-to-end on CPU: full stack (synthetic data pipeline,
+AdamW, remat, microbatching, int8 error-feedback gradient compression,
+async checkpoints, failure injection + restart).
+
+    PYTHONPATH=src python examples/train_tiny_lm.py
+
+On a real pod the same driver (repro/launch/train.py) runs any assigned
+arch at full size with the FSDPxTP shardings proven by the dry-run.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.supervisor import FailureInjector, Supervisor
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+STEPS = 150
+cfg = get_config("stablelm-3b").reduced()
+tcfg = TrainConfig(
+    microbatches=2,
+    remat=True,
+    dtype=jnp.float32,
+    compress_grads=True,  # int8 error-feedback wire simulation
+    optimizer=AdamWConfig(peak_lr=3e-3, warmup_steps=10, total_steps=STEPS),
+)
+data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
+step_jit = jax.jit(make_train_step(cfg, tcfg), donate_argnums=0)
+key = jax.random.PRNGKey(0)
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    sup = Supervisor(
+        make_state=lambda: init_train_state(cfg, tcfg, key),
+        step_fn=lambda st, i: step_jit(st, data.batch_at(i)),
+        ckpt_manager=CheckpointManager(ckpt_dir),
+        ckpt_every=25,
+        failure_injector=FailureInjector(fail_at_steps=(60,)),  # node loss!
+    )
+    sup.run(STEPS)
+    losses = [h["loss"] for h in sup.history]
+    print(f"\nsteps run: {len(sup.history)} (incl. replay after "
+          f"{sup.restarts} injected failure)")
+    print(f"loss: first10={sum(losses[:10])/10:.3f} "
+          f"last10={sum(losses[-10:])/10:.3f}")
+    assert sum(losses[-10:]) < sum(losses[:10]), "should have learned"
+    print("loss decreased through a failure+restart  [OK]")

@@ -1,0 +1,24 @@
+"""Core contribution: the non-blocking buddy system (paper Algorithms 1-4)
+and its TPU-native wavefront adaptation.
+
+Modules:
+  bits        — status-bit algebra (5-bit node masks)
+  ref         — paper-faithful sequential oracle (host allocator)
+  baselines   — spin-lock tree buddy + Linux-style free-list buddy
+  concurrent  — batched wavefront allocator (jnp, jittable; kernel oracle)
+  nbbs_jax    — single-op in-graph API on top of the wavefront
+  bunch       — packed-word multi-level variant (paper §III-D)
+"""
+
+from repro.core.bits import BUSY, OCC, STATUS_BITS  # noqa: F401
+from repro.core.bunch import BunchBuddy  # noqa: F401
+from repro.core.concurrent import (  # noqa: F401
+    TreeConfig,
+    free_batch,
+    levels_from_sizes,
+    wavefront_alloc,
+    wavefront_step,
+)
+from repro.core.nbbs_jax import AllocState, init_state, nb_alloc, nb_free  # noqa: F401
+from repro.core.ref import NBBSRef, NBBSStats  # noqa: F401
+from repro.core.baselines import FreeListBuddy, SpinlockTreeBuddy  # noqa: F401

@@ -1,0 +1,381 @@
+"""Wavefront non-blocking buddy system — the TPU-native adaptation.
+
+The paper's threads contend on tree words with CAS; losers retry.  A TPU
+has no threads or CAS, so the same optimistic-concurrency insight is
+re-thought for a data-parallel machine (DESIGN.md §2):
+
+  * a *wavefront* of K allocation requests is processed per round,
+    entirely with vectorized bitwise/scan primitives (VPU-friendly);
+  * each pending request is tentatively assigned a distinct free node of
+    its target level via a rank/prefix-sum match (the vector analogue of
+    the paper's scattered level scan);
+  * cross-level conflicts (one request's node inside another's sub-tree)
+    are detected with min-id propagation over the tree — the
+    deterministic arbitration that replaces CAS serialization.  Losers
+    retry next round, exactly like a failed CAS;
+  * winners' climbs (paper TRYALLOC lines T6-T18) are *merged*: branch
+    occupancy marks are monotone ORs, so all winners' paths are applied
+    in one bottom-up pass per round.  This is the key TPU win: what costs
+    each thread `level - max_level` RMWs on x86 costs the whole wavefront
+    one vector pass — the same motivation as the paper's 4-level bunch
+    optimization (§III-D), taken to its vector-width limit.
+
+Progress property (the lock-freedom analogue, property-tested): every
+round with pending requests either commits at least one request or fails
+requests whose level is exhausted — the minimum-id winner always
+survives arbitration, mirroring Lemma A.3.
+
+Releases within a round are processed as a faithful sequential scan of
+FREENODE/UNMARK (coalescing-bit phases are not commutative, unlike the
+occupancy ORs); rounds interleave frees-then-allocs, which is one legal
+linearization.
+
+Everything here is shape-static and jittable; the Pallas kernel
+(`kernels/nbbs_alloc.py`) implements the same per-round algorithm with
+the tree resident in VMEM and this module is its oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.bits import (
+    BUSY,
+    COAL_LEFT,
+    COAL_RIGHT,
+    OCC,
+    OCC_LEFT,
+    OCC_RIGHT,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    """Static geometry of the allocator tree."""
+
+    depth: int          # leaves are at this level; units = 2**depth
+    max_level: int = 0  # largest allocatable block lives at this level
+
+    @property
+    def n_words(self) -> int:
+        return 1 << (self.depth + 1)
+
+    def empty_tree(self) -> Array:
+        return jnp.zeros(self.n_words, dtype=jnp.int32)
+
+
+def _level_of(n: Array) -> Array:
+    """Tree level of node index n>=1 (vectorized floor(log2(n)))."""
+    return 31 - lax.clz(n.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized tree passes (static unrolled loops over levels)
+# ---------------------------------------------------------------------------
+
+
+def _ancestor_occ(cfg: TreeConfig, tree: Array) -> Array:
+    """anc[n] == True iff some strict ancestor of n has its OCC bit set.
+
+    One top-down pass; level slices are static so XLA sees d fused
+    vector ops (paper's is_free pre-check + T11 occupancy discovery,
+    evaluated for every node at once).
+    """
+    anc = jnp.zeros(cfg.n_words, dtype=bool)
+    for lev in range(1, cfg.depth + 1):
+        lo, hi = 1 << lev, 1 << (lev + 1)
+        parent_anc = anc[lo // 2 : hi // 2]
+        parent_occ = (tree[lo // 2 : hi // 2] & OCC) != 0
+        child_anc = jnp.repeat(parent_anc | parent_occ, 2)
+        anc = anc.at[lo:hi].set(child_anc)
+    return anc
+
+
+def _min_id_fields(cfg: TreeConfig, own: Array) -> Tuple[Array, Array]:
+    """(desc_min, anc_min): min request-id over strict descendants /
+    strict ancestors of every node, given per-node tentative owner ids."""
+    inf = own.dtype.type(jnp.iinfo(own.dtype).max)
+    desc = jnp.full(cfg.n_words, inf, dtype=own.dtype)
+    for lev in range(cfg.depth - 1, -1, -1):
+        lo, hi = 1 << lev, 1 << (lev + 1)
+        child_own = own[2 * lo : 2 * hi]
+        child_desc = desc[2 * lo : 2 * hi]
+        m = jnp.minimum(child_own, child_desc).reshape(-1, 2).min(axis=1)
+        desc = desc.at[lo:hi].set(m)
+    ancm = jnp.full(cfg.n_words, inf, dtype=own.dtype)
+    for lev in range(1, cfg.depth + 1):
+        lo, hi = 1 << lev, 1 << (lev + 1)
+        p = jnp.minimum(ancm[lo // 2 : hi // 2], own[lo // 2 : hi // 2])
+        ancm = ancm.at[lo:hi].set(jnp.repeat(p, 2))
+    return desc, ancm
+
+
+# ---------------------------------------------------------------------------
+# Wavefront allocation
+# ---------------------------------------------------------------------------
+
+
+def alloc_round(
+    cfg: TreeConfig,
+    tree: Array,
+    levels: Array,
+    pending: Array,
+    nodes: Array,
+):
+    """One arbitration round of the wavefront (shared verbatim by the
+    jnp driver below and the Pallas kernel's loop body).
+
+    Returns (tree, nodes, pending, merged_writes, logical_rmws, won).
+    """
+    K = levels.shape[0]
+    ids = jnp.arange(K, dtype=jnp.int32)
+    inf = jnp.iinfo(jnp.int32).max
+
+    anc = _ancestor_occ(cfg, tree)
+    # CAS(0 -> BUSY) needs the word to be exactly zero (paper T2), and
+    # no fully-occupied ancestor may exist (paper T11).
+    allocatable = (tree == 0) & ~anc
+
+    target = jnp.zeros(K, dtype=jnp.int32)
+    got = jnp.zeros(K, dtype=bool)
+    exhausted = jnp.zeros(K, dtype=bool)
+    for lev in range(cfg.max_level, cfg.depth + 1):
+        lo, hi = 1 << lev, 1 << (lev + 1)
+        avail = allocatable[lo:hi]
+        cnt = avail.sum()
+        req = pending & (levels == lev)
+        rank = jnp.cumsum(req) - 1  # rank among this level's requests
+        csum = jnp.cumsum(avail.astype(jnp.int32))
+        node_of_rank = (
+            jnp.searchsorted(csum, rank.astype(jnp.int32) + 1, side="left")
+            .astype(jnp.int32)
+            + lo
+        )
+        sel = req & (rank < cnt)
+        target = jnp.where(sel, node_of_rank, target)
+        got = got | sel
+        exhausted = exhausted | (req & (cnt == 0))
+
+    # --- arbitration: min request id wins on overlap ----------------
+    own = jnp.full(cfg.n_words, inf, dtype=jnp.int32)
+    own = own.at[jnp.where(got, target, 0)].min(jnp.where(got, ids, inf))
+    desc, ancm = _min_id_fields(cfg, own)
+    win = got & (ids < desc[target]) & (ids < ancm[target])
+
+    # --- commit winners: node word 0 -> BUSY (scatter-max is exact
+    # because the word is known-zero) ---------------------------------
+    win_nodes = jnp.where(win, target, 0)
+    tree = tree.at[win_nodes].max(jnp.where(win, BUSY, 0))
+    marked = jnp.zeros(cfg.n_words, dtype=bool).at[win_nodes].set(win)
+    merged = jnp.int32(0)
+    # --- merged climb (paper T6-T18, all winners at once) ------------
+    for lev in range(cfg.depth, cfg.max_level, -1):
+        lo, hi = 1 << lev, 1 << (lev + 1)
+        pair = marked[lo:hi].reshape(-1, 2)
+        left_m, right_m = pair[:, 0], pair[:, 1]
+        or_mask = jnp.where(left_m, OCC_LEFT, 0) | jnp.where(
+            right_m, OCC_RIGHT, 0
+        )
+        clear_mask = jnp.where(left_m, COAL_LEFT, 0) | jnp.where(
+            right_m, COAL_RIGHT, 0
+        )
+        plo, phi = lo // 2, hi // 2
+        pv = tree[plo:phi]
+        tree = tree.at[plo:phi].set((pv | or_mask) & ~clear_mask)
+        touched = left_m | right_m
+        marked = marked.at[plo:phi].set(marked[plo:phi] | touched)
+        merged = merged + touched.sum(dtype=jnp.int32)
+
+    nodes = jnp.where(win, target, nodes)
+    logical = win.sum(dtype=jnp.int32) + jnp.where(
+        win, levels - cfg.max_level, 0
+    ).sum(dtype=jnp.int32)
+    merged = merged + win.sum(dtype=jnp.int32)
+    pending = pending & ~win & ~exhausted
+    return tree, nodes, pending, merged, logical, win
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def wavefront_alloc(
+    cfg: TreeConfig,
+    tree: Array,
+    levels: Array,
+    active: Array,
+    max_rounds: int = 64,
+) -> Tuple[Array, Array, Array, dict]:
+    """Allocate a wavefront of requests.
+
+    Args:
+      cfg: static tree geometry.
+      tree: int32[n_words] status-bit tree.
+      levels: int32[K] target level per request (from `level_for_size`).
+      active: bool[K] request-present mask.
+      max_rounds: static bound on arbitration rounds (progress guarantees
+        termination long before this in practice; K+1 rounds always
+        suffice because >=1 request commits or fails per round).
+
+    Returns:
+      (tree, nodes, ok, stats) — nodes int32[K] (0 where failed/inactive),
+      ok bool[K]; stats dict with 'rounds', 'merged_writes',
+      'logical_rmws' (per-request climb RMW count, the paper's metric).
+    """
+    K = levels.shape[0]
+
+    def round_body(carry):
+        tree, nodes, pending, rounds, merged_writes, logical_rmws = carry
+        tree, nodes, pending, merged, logical, _ = alloc_round(
+            cfg, tree, levels, pending, nodes
+        )
+        return (
+            tree,
+            nodes,
+            pending,
+            rounds + 1,
+            merged_writes + merged,
+            logical_rmws + logical,
+        )
+
+    def cond(carry):
+        _, _, pending, rounds, _, _ = carry
+        return pending.any() & (rounds < max_rounds)
+
+    init = (
+        tree,
+        jnp.zeros(K, dtype=jnp.int32),
+        active,
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    tree, nodes, _, rounds, merged_writes, logical_rmws = lax.while_loop(
+        cond, round_body, init
+    )
+    ok = nodes > 0
+    stats = {
+        "rounds": rounds,
+        "merged_writes": merged_writes,
+        "logical_rmws": logical_rmws,
+    }
+    return tree, nodes, ok, stats
+
+
+# ---------------------------------------------------------------------------
+# Faithful in-graph release (FREENODE + UNMARK with lax.while_loop)
+# ---------------------------------------------------------------------------
+
+
+def _free_one(cfg: TreeConfig, tree: Array, n: Array) -> Tuple[Array, Array]:
+    """Release node `n` (paper Algorithms 3-4). Returns (tree, writes)."""
+    ub = jnp.int32(cfg.max_level)
+    n = n.astype(jnp.int32)
+
+    # -- phase 1: coalescing marks bottom-up --------------------------------
+    def ph1_cond(c):
+        _, _, runner, brk, _ = c
+        return (_level_of(runner) > ub) & ~brk
+
+    def ph1_body(c):
+        tree, current, runner, _, w = c
+        or_val = COAL_LEFT >> (runner & 1)
+        old = tree[current]
+        tree = tree.at[current].set(old | or_val)
+        occ_buddy = (old & (OCC_RIGHT << (runner & 1))) != 0
+        coal_buddy = (old & (COAL_RIGHT << (runner & 1))) != 0
+        brk = occ_buddy & ~coal_buddy
+        return tree, current >> 1, current, brk, w + 1
+
+    tree, _, _, _, writes = lax.while_loop(
+        ph1_cond, ph1_body, (tree, n >> 1, n, jnp.bool_(False), jnp.int32(0))
+    )
+
+    # -- phase 2: plain write, release the node (F19) ------------------------
+    tree = tree.at[n].set(0)
+    writes = writes + 1
+
+    # -- phase 3: UNMARK (do-while) ------------------------------------------
+    def un_cond(c):
+        _, _, stop, _ = c
+        return ~stop
+
+    def un_body(c):
+        tree, current, _, w = c
+        child = current
+        current = current >> 1
+        cv = tree[current]
+        coal = (cv & (COAL_LEFT >> (child & 1))) != 0
+        nv = cv & ~((OCC_LEFT | COAL_LEFT) >> (child & 1))
+        tree = jnp.where(coal, tree.at[current].set(nv), tree)
+        w = w + jnp.where(coal, 1, 0)
+        occ_buddy = (nv & (OCC_RIGHT << (child & 1))) != 0
+        stop = (~coal) | ~((_level_of(current) > ub) & ~occ_buddy)
+        return tree, current, stop, w
+
+    def run_unmark(args):
+        tree, w = args
+        tree, _, _, w2 = lax.while_loop(
+            un_cond, un_body, (tree, n, jnp.bool_(False), jnp.int32(0))
+        )
+        return tree, w + w2
+
+    tree, writes = lax.cond(
+        _level_of(n) != ub, run_unmark, lambda a: a, (tree, writes)
+    )
+    return tree, writes
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def free_batch(
+    cfg: TreeConfig, tree: Array, nodes: Array, active: Array
+) -> Tuple[Array, Array]:
+    """Release a batch of nodes (sequential scan — coalescing phases do
+    not commute; one legal linearization).  Returns (tree, writes)."""
+
+    def step(carry, x):
+        tree, writes = carry
+        node, act = x
+        def do(tree):
+            return _free_one(cfg, tree, node)
+        tree, w = lax.cond(
+            act & (node > 0), do, lambda t: (t, jnp.int32(0)), tree
+        )
+        return (tree, writes + w), None
+
+    (tree, writes), _ = lax.scan(step, (tree, jnp.int32(0)), (nodes, active))
+    return tree, writes
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def wavefront_step(
+    cfg: TreeConfig,
+    tree: Array,
+    free_nodes: Array,
+    free_active: Array,
+    alloc_levels: Array,
+    alloc_active: Array,
+    max_rounds: int = 64,
+):
+    """One scheduler round: releases first, then the allocation wavefront
+    (one legal linearization of a mixed concurrent batch)."""
+    tree, free_writes = free_batch(cfg, tree, free_nodes, free_active)
+    tree, nodes, ok, stats = wavefront_alloc(
+        cfg, tree, alloc_levels, alloc_active, max_rounds
+    )
+    stats = dict(stats)
+    stats["free_writes"] = free_writes
+    return tree, nodes, ok, stats
+
+
+def levels_from_sizes(cfg: TreeConfig, total_memory: int, sizes: Array) -> Array:
+    """Vectorized paper rule A5: level = floor(log2(total/size)), clamped."""
+    sizes = jnp.maximum(sizes.astype(jnp.int32), 1)
+    ratio = jnp.int32(total_memory) // sizes
+    lev = 31 - lax.clz(jnp.maximum(ratio, 1))
+    return jnp.clip(lev, 0, cfg.depth).astype(jnp.int32)

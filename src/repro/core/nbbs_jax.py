@@ -1,0 +1,83 @@
+"""Single-operation jitted allocator — in-graph NBBS for serving steps.
+
+A wavefront of width 1 is *exactly* the sequential specification: the
+rank-0 assignment picks the first level node whose word is zero and whose
+ancestors carry no OCC bit — the same node the paper's NBALLOC level scan
+(with sub-tree skipping) lands on.  We therefore express the single-op
+API as K=1 wavefronts rather than duplicating the algorithm.
+
+`AllocState` carries the paper's two arrays (tree[] and index[]) as JAX
+arrays so allocation/release can live inside a jitted serving step
+(e.g. allocating KV-cache pages for newly admitted sequences without
+host round-trips).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.concurrent import (
+    TreeConfig,
+    free_batch,
+    levels_from_sizes,
+    wavefront_alloc,
+)
+
+Array = jax.Array
+
+
+class AllocState(NamedTuple):
+    tree: Array   # int32[2^(depth+1)] status-bit tree
+    index: Array  # int32[units] node that served each unit offset
+
+
+def init_state(cfg: TreeConfig) -> AllocState:
+    return AllocState(
+        tree=cfg.empty_tree(),
+        index=jnp.zeros(1 << cfg.depth, dtype=jnp.int32),
+    )
+
+
+def _node_to_unit_offset(cfg: TreeConfig, node: Array) -> Array:
+    """Unit offset of a node's chunk: (n - 2^level) * 2^(depth-level)."""
+    level = 31 - jax.lax.clz(jnp.maximum(node, 1))
+    return (node - (1 << level)) << (cfg.depth - level)
+
+
+def nb_alloc(
+    cfg: TreeConfig, state: AllocState, level: Array
+) -> Tuple[AllocState, Array, Array]:
+    """Allocate one chunk at `level`. Returns (state, unit_offset, ok)."""
+    levels = jnp.reshape(level, (1,)).astype(jnp.int32)
+    tree, nodes, ok, _ = wavefront_alloc(
+        cfg, state.tree, levels, jnp.ones((1,), bool)
+    )
+    node = nodes[0]
+    off = _node_to_unit_offset(cfg, node)
+    index = jnp.where(
+        ok[0], state.index.at[off].set(node), state.index
+    )
+    return AllocState(tree, index), off, ok[0]
+
+
+def nb_free(cfg: TreeConfig, state: AllocState, unit_offset: Array) -> AllocState:
+    """Release the chunk previously allocated at `unit_offset`."""
+    node = state.index[unit_offset]
+    tree, _ = free_batch(
+        cfg,
+        state.tree,
+        jnp.reshape(node, (1,)),
+        jnp.ones((1,), bool),
+    )
+    return AllocState(tree, state.index)
+
+
+def nb_alloc_size(
+    cfg: TreeConfig, state: AllocState, total_memory: int, size: Array
+) -> Tuple[AllocState, Array, Array]:
+    """Size-based convenience (paper NBALLOC API, rule A5 in-graph)."""
+    level = levels_from_sizes(cfg, total_memory, jnp.reshape(size, (1,)))[0]
+    return nb_alloc(cfg, state, level)

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: wavefront NBBS allocation with the tree in VMEM.
+
+The paper's hot path is the alloc/free critical section: on x86 each
+climb step is an atomic RMW that takes a cache line exclusive (§III-D).
+On TPU the equivalent cost model is HBM round-trips per tree-word
+update.  This kernel removes them entirely: the whole status-bit tree
+lives in VMEM for the duration of a wavefront (a 2^19-node tree is
+2 MiB of int32 — comfortably VMEM-resident; the packed-bunch encoding
+of `core/bunch.py` shrinks it a further ~6x if ever needed), and every
+arbitration round is a handful of full-tree VPU passes:
+
+  round =  top-down ancestor-OCC propagation        (d vector steps)
+         + per-level rank/prefix-sum assignment      (d cumsums)
+         + min-id conflict propagation up + down     (2d vector steps)
+         + merged occupancy climb                    (d vector steps)
+
+i.e. O(depth) (8,128)-lane vector ops per round regardless of how many
+requests commit — the vector-width limit of the paper's "one CAS per
+level per thread" cost model.
+
+Grid: a single program; rounds run as a bounded fori_loop inside the
+kernel (conflict losers retry exactly like failed CAS).  BlockSpecs map
+the full tree / request vectors into VMEM — the deliberate tiling
+decision here is *no tiling*: climbs need random access to all levels,
+which is precisely why the tree must be VMEM-resident (HBM-blocked
+variants would pay a round-trip per level, reproducing the x86 cache
+line ping-pong the paper fights).
+
+Mosaic-lowering caveat (documented per DESIGN.md §6): the round body
+uses one scatter (winner commit) and K-length gathers (arbitration
+reads); these lower on interpret mode (our validation path on this
+CPU-only container) and current Mosaic dynamic-gather support; the
+jnp reference (`core/concurrent.py`, shared verbatim via
+`alloc_round`) is the fallback implementation on any backend.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.concurrent import TreeConfig, alloc_round
+
+Array = jax.Array
+
+
+def _wavefront_kernel(
+    cfg: TreeConfig,
+    max_rounds: int,
+    tree_ref,
+    levels_ref,
+    active_ref,
+    tree_out_ref,
+    nodes_ref,
+    stats_ref,
+):
+    tree = tree_ref[...]
+    levels = levels_ref[...]
+    pending = active_ref[...] != 0
+    K = levels.shape[0]
+    nodes = jnp.zeros((K,), dtype=jnp.int32)
+
+    def body(_, carry):
+        tree, nodes, pending, rounds, merged, logical = carry
+        live = pending.any()
+
+        def run(args):
+            tree, nodes, pending, rounds, merged, logical = args
+            tree, nodes, pending, m, l, _ = alloc_round(
+                cfg, tree, levels, pending, nodes
+            )
+            return tree, nodes, pending, rounds + 1, merged + m, logical + l
+
+        return lax.cond(
+            live, run, lambda a: a, (tree, nodes, pending, rounds, merged, logical)
+        )
+
+    tree, nodes, pending, rounds, merged, logical = lax.fori_loop(
+        0,
+        max_rounds,
+        body,
+        (tree, nodes, pending, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+    )
+    tree_out_ref[...] = tree
+    nodes_ref[...] = nodes
+    stats_ref[...] = jnp.stack([rounds, merged, logical])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "max_rounds", "interpret")
+)
+def wavefront_alloc_pallas(
+    cfg: TreeConfig,
+    tree: Array,
+    levels: Array,
+    max_rounds: int = 64,
+    *,
+    active: Array | None = None,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array, Array]:
+    """Pallas entry point. Returns (tree, nodes, ok, stats[3]).
+
+    `interpret=True` is the validation mode on CPU (kernel body executed
+    in Python); on a TPU runtime pass interpret=False to lower via
+    Mosaic.
+    """
+    if active is None:
+        active = jnp.ones(levels.shape, dtype=jnp.int32)
+    else:
+        active = active.astype(jnp.int32)
+    K = levels.shape[0]
+    kernel = functools.partial(_wavefront_kernel, cfg, max_rounds)
+    tree_out, nodes, stats = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((cfg.n_words,), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((3,), jnp.int32),
+        ],
+        in_specs=[
+            pl.BlockSpec((cfg.n_words,), lambda: (0,)),  # full tree in VMEM
+            pl.BlockSpec((K,), lambda: (0,)),
+            pl.BlockSpec((K,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cfg.n_words,), lambda: (0,)),
+            pl.BlockSpec((K,), lambda: (0,)),
+            pl.BlockSpec((3,), lambda: (0,)),
+        ],
+        grid=(),
+        interpret=interpret,
+    )(tree, levels.astype(jnp.int32), active)
+    return tree_out, nodes, nodes > 0, stats

@@ -1,0 +1,178 @@
+"""Public kernel ops: backend dispatch + differentiability.
+
+Selection policy (`impl`):
+  "auto"      — Pallas/Mosaic on TPU backends, pure-jnp reference
+                otherwise (XLA CPU/GPU cannot lower Mosaic kernels;
+                the dry-run lowers the reference path — identical math,
+                verified allclose by the kernel test sweeps).
+  "pallas"    — compiled Pallas (TPU runtime).
+  "interpret" — Pallas interpret mode (CPU validation; slow).
+  "reference" — pure-jnp oracle.
+
+`flash_attention` is differentiable: forward may use the fused kernel,
+backward recomputes through the reference (identical math -> exact
+gradients w.r.t. the reference function).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.concurrent import TreeConfig
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.nbbs_alloc import wavefront_alloc_pallas
+from repro.kernels.paged_attention import paged_attention as paged_attention_pallas
+
+Array = jax.Array
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def _resolve(impl: str) -> str:
+    return default_impl() if impl == "auto" else impl
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (differentiable)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def _flash_attention(q, k, v, causal, window, softcap, scale, impl):
+    if impl == "reference":
+        return kref.mha_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    return flash_attention_fwd(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=scale,
+        interpret=(impl == "interpret"),
+    )
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, scale, impl):
+    out = _flash_attention(q, k, v, causal, window, softcap, scale, impl)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, scale, impl, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: kref.mha_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        ),
+        q,
+        k,
+        v,
+    )
+    return vjp(g)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+) -> Array:
+    """Differentiable attention. q:[B,Hq,S,D], k/v:[B,Hkv,Sk,D]."""
+    return _flash_attention(
+        q, k, v, causal, window, softcap, scale, _resolve(impl)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (inference only — no vjp needed)
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    context_lens: Array,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+) -> Array:
+    impl = _resolve(impl)
+    if impl == "reference":
+        return kref.paged_attention_reference(
+            q,
+            k_pages,
+            v_pages,
+            block_tables,
+            context_lens,
+            softcap=softcap,
+            scale=scale,
+        )
+    return paged_attention_pallas(
+        q,
+        k_pages,
+        v_pages,
+        block_tables,
+        context_lens,
+        softcap=softcap,
+        scale=scale,
+        interpret=(impl == "interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# NBBS wavefront allocation
+# ---------------------------------------------------------------------------
+
+
+def nbbs_wavefront_alloc(
+    cfg: TreeConfig,
+    tree: Array,
+    levels: Array,
+    *,
+    active: Array | None = None,
+    max_rounds: int = 64,
+    impl: str = "auto",
+):
+    """Returns (tree, nodes, ok, stats-dict)."""
+    impl = _resolve(impl)
+    if impl == "reference":
+        if active is None:
+            active = jnp.ones(levels.shape, dtype=bool)
+        return kref.nbbs_wavefront_reference(
+            cfg, tree, levels, active, max_rounds
+        )
+    tree, nodes, ok, stats = wavefront_alloc_pallas(
+        cfg,
+        tree,
+        levels,
+        max_rounds,
+        active=active,
+        interpret=(impl == "interpret"),
+    )
+    return tree, nodes, ok, {
+        "rounds": stats[0],
+        "merged_writes": stats[1],
+        "logical_rmws": stats[2],
+    }

@@ -1,0 +1,154 @@
+"""Pallas TPU paged decode attention — the NBBS consumer (serving hot spot).
+
+One new token per sequence attends over a KV cache stored as
+buddy-allocated pages in a global pool.  The page indirection uses the
+TPU scalar-prefetch pattern (`PrefetchScalarGridSpec`): the block table
+is prefetched into SMEM and the k/v BlockSpec index maps read it to
+steer each grid step's DMA at the right pool page — the TPU-native
+equivalent of vLLM's gather, with two NBBS-specific advantages
+(DESIGN.md §2): buddy blocks are power-of-two *contiguous* page runs,
+so (a) larger pages are addressable with the same table and (b) the
+pool fragments without external holes (the paper's coalescing at work).
+
+Grid: (batch, q_heads, pages); pages innermost with fp32 online-softmax
+scratch, invalid pages (table id < 0, or beyond the sequence's context
+length) skipped with @pl.when.
+
+Validated with interpret=True against `ref.paged_attention_reference`
+over shape/dtype/page-size sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    # static
+    scale: float,
+    softcap: Optional[float],
+    page: int,
+    group: int,
+    # prefetched scalars
+    tables_ref,
+    lens_ref,
+    # tensor refs
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = lens_ref[b]
+    page_id = tables_ref[b, j]
+    live = (page_id >= 0) & (j * page < ctx)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [D]
+        k = k_ref[0, :, 0].astype(jnp.float32)  # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)  # [page, D]
+        s = (k @ q) * scale  # [page]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+        s = jnp.where(pos < ctx, s, NEG_INF)
+
+        m_prev = m_scr[0]
+        m_cur = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(m_cur == NEG_INF, 0.0, p)
+        alpha = jnp.where(m_cur == NEG_INF, 1.0, alpha)
+        m_scr[0] = m_cur
+        l_scr[0] = l_scr[0] * alpha + p.sum()
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        l = l_scr[0]
+        norm = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / norm).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "scale", "interpret")
+)
+def paged_attention(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    context_lens: Array,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    interpret: bool = True,
+) -> Array:
+    """q: [B,Hq,D]; k/v_pages: [P,page,Hkv,D]; tables: [B,max_pages]."""
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    max_pages = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_paged_decode_kernel, scale, softcap, page, group)
+
+    def q_map(b, h, j, tables, lens):
+        return (b, h, 0)
+
+    def kv_map(b, h, j, tables, lens):
+        return (jnp.maximum(tables[b, j], 0), 0, h // group, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), q_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((D,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32),
+        context_lens.astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

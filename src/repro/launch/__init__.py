@@ -1,0 +1,1 @@
+"""Launch layer: mesh, dry-run, train/serve drivers."""

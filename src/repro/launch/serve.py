@@ -1,0 +1,76 @@
+"""Serving launcher: continuous batching on NBBS-paged KV memory.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \
+      --requests 16 --max-new 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--num-pages", type=int, default=256)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dtype = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = ServeEngine(
+        cfg,
+        params,
+        num_pages=args.num_pages,
+        page_tokens=args.page_tokens,
+        max_batch=args.max_batch,
+        dtype=dtype,
+    )
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        plen = int(rng.integers(2, args.prompt_len + 1))
+        eng.submit(
+            Request(
+                i,
+                rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+                max_new_tokens=args.max_new,
+            )
+        )
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in eng.completed.values())
+    print(
+        json.dumps(
+            {
+                "completed": len(eng.completed),
+                "generated_tokens": toks,
+                "tokens_per_s": toks / dt,
+                "engine_stats": eng.stats,
+                "kv": eng.kv.fragmentation(),
+            }
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

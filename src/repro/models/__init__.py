@@ -1,0 +1,11 @@
+"""Model zoo: functional decoder backbones for all assigned architectures."""
+
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+    train_loss,
+)
+from repro.models.sharding import MeshAxes, param_specs  # noqa: F401

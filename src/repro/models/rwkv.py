@@ -1,0 +1,186 @@
+"""RWKV6 "Finch" block — attention-free mixer with data-dependent decay.
+
+Time-mix (per head, head size P):
+    w_t = exp(-exp(w0 + lora_w(x~_t)))          data-dependent decay [d]
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t       state [P, P] per head
+    y_t = r_t . (S_{t-1} + diag(u (.) k_t) v_t)  (u = per-channel bonus)
+
+followed by per-head group-norm, a silu gate, and an output projection.
+Channel-mix is the squared-relu two-layer MLP with token shift.
+
+Training runs lax.scan over time on the [B, H, P, P] state (the
+recurrence is inherently sequential in its data-dependent decay; a
+chunked parallel form is a §Perf candidate, see EXPERIMENTS.md).
+Decode carries {token-shift xs, wkv state} — O(1) per token, which is
+what long_500k exercises.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def init_rwkv6(key: Array, d: int, d_ff: int, head_dim: int, lora: int = 64) -> dict:
+    H = d // head_dim
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        # token-shift interpolation weights per stream
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        # data-dependent decay LoRA (the Finch signature feature)
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wl_a": jax.random.normal(ks[5], (d, lora), jnp.float32) * s,
+        "wl_b": jax.random.normal(ks[6], (lora, d), jnp.float32) * lora ** -0.5,
+        "u": jax.random.normal(ks[7], (d,), jnp.float32) * 0.1,
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_k": jax.random.normal(ks[8], (d, d_ff), jnp.float32) * s,
+        "cm_v": jax.random.normal(ks[9], (d_ff, d), jnp.float32) * d_ff ** -0.5,
+        "cm_r": jax.random.normal(jax.random.fold_in(key, 99), (d, d), jnp.float32)
+        * s,
+        # pre-mix layer norms (RWKV uses LN; scale-only RMS-style here
+        # keeps the param layout uniform with the rest of the zoo)
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _shift(x: Array, x_prev: Array) -> Array:
+    """Token shift: previous token per position; x_prev seeds position 0."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _group_norm(y: Array, scale: Array, H: int) -> Array:
+    """Per-head layer norm over [B, T, H*P]."""
+    B, T, d = y.shape
+    yh = y.reshape(B, T, H, d // H).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (yh.reshape(B, T, d) * scale).astype(y.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, head_dim: int, state: Array):
+    """r,k,v,w: [B, T, d] (w = per-step decay in (0,1)); u: [d].
+
+    Returns (y: [B, T, d], final state [B, H, P, P])."""
+    B, T, d = r.shape
+    H = d // head_dim
+    P = head_dim
+
+    def reshape(a):
+        return a.reshape(B, T, H, P).swapaxes(0, 1)  # [T, B, H, P]
+
+    rs, ks, vs, ws = map(reshape, (r, k, v, w))
+    uh = u.reshape(H, P)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # [B, H, P]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)  # [B,H,P,P]
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + uh[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    S, ys = lax.scan(step, state, (rs, ks, vs, ws))
+    return ys.swapaxes(0, 1).reshape(B, T, d), S
+
+
+def apply_rwkv6(
+    p: dict, x: Array, *, head_dim: int, state: dict | None = None
+) -> Tuple[Array, dict]:
+    """Full block (time-mix + channel-mix). x: [B, S, d].
+
+    `state` (decode/chunk streaming) carries:
+      tm_x, cm_x: [B, d] last-token shifts; wkv: [B, H, P, P].
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    dtype = x.dtype
+    H = d // head_dim
+    if state is None:
+        state = init_rwkv6_state(B, d, head_dim)
+    from repro.models.layers import rms_norm
+
+    residual = x
+    x = rms_norm(x, p["ln1"])
+    x_in = x
+
+    # ---- time mix -----------------------------------------------------
+    xprev = _shift(x, state["tm_x"].astype(dtype))
+    def mix(mu):
+        return x + (xprev - x) * mu.astype(dtype)
+
+    xr, xk, xv, xg, xw = (
+        mix(p["mu_r"]),
+        mix(p["mu_k"]),
+        mix(p["mu_v"]),
+        mix(p["mu_g"]),
+        mix(p["mu_w"]),
+    )
+    r = xr @ p["w_r"].astype(dtype)
+    k = xk @ p["w_k"].astype(dtype)
+    v = xv @ p["w_v"].astype(dtype)
+    g = xg @ p["w_g"].astype(dtype)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["wl_a"]) @ p["wl_b"]
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + dd))  # [B,S,d] in (0,1)
+
+    y, wkv = _wkv_scan(
+        r.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        w,
+        p["u"],
+        head_dim,
+        state["wkv"],
+    )
+    y = _group_norm(y.astype(dtype), p["ln_scale"], H)
+    y = (y * jax.nn.silu(g.astype(jnp.float32)).astype(dtype)) @ p["w_o"].astype(
+        dtype
+    )
+    residual = residual + y
+
+    # ---- channel mix ---------------------------------------------------
+    xc = rms_norm(residual, p["ln2"])
+    xprev_c = _shift(xc, state["cm_x"].astype(dtype))
+    xk_c = xc + (xprev_c - xc) * p["cm_mu_k"].astype(dtype)
+    xr_c = xc + (xprev_c - xc) * p["cm_mu_r"].astype(dtype)
+    kk = jnp.square(
+        jax.nn.relu((xk_c @ p["cm_k"].astype(dtype)).astype(jnp.float32))
+    ).astype(dtype)
+    rr = jax.nn.sigmoid((xr_c @ p["cm_r"].astype(dtype)).astype(jnp.float32))
+    out = residual + (kk @ p["cm_v"].astype(dtype)) * rr.astype(dtype)
+
+    new_state = {
+        # next chunk's shifts: last token of the time-mix input and of
+        # the channel-mix input respectively
+        "tm_x": x_in[:, -1].astype(jnp.float32),
+        "cm_x": xc[:, -1].astype(jnp.float32),
+        "wkv": wkv,
+    }
+    return out, new_state
+
+
+def init_rwkv6_state(batch: int, d: int, head_dim: int) -> dict:
+    H = d // head_dim
+    return {
+        "tm_x": jnp.zeros((batch, d), jnp.float32),
+        "cm_x": jnp.zeros((batch, d), jnp.float32),
+        "wkv": jnp.zeros((batch, H, head_dim, head_dim), jnp.float32),
+    }

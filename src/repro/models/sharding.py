@@ -1,0 +1,147 @@
+"""Parameter / activation partitioning rules (DP x TP x EP x SP).
+
+Static `MeshAxes` describes the logical axes of the active mesh; the
+launch layer constructs it from the production mesh (('pod','data')
+fused as the DP group on the multi-pod mesh).  Model code calls
+`constrain` with logical specs; when `axes` is None (CPU unit tests) it
+is a no-op, keeping the model code mesh-agnostic.
+
+Parameter rules (FSDP x TP, MaxText-style): every matmul weight shards
+its TP-parallel dimension on 'model' (attention heads / ffn hidden /
+vocab / experts) and its other large dimension on the DP group
+(ZeRO-3-style weight sharding — required to fit e.g. llama4-scout's
+~100B params on 256 chips; XLA SPMD inserts the per-layer all-gathers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...] = ("data",)  # ('pod','data') on the multi-pod mesh
+    tp: str = "model"
+    # FSDP weight sharding over the dp group (ZeRO-3). Disable to keep
+    # weights replicated across DP (small models).
+    fsdp: bool = True
+
+
+def constrain(x: Array, axes: Optional[MeshAxes], spec: P) -> Array:
+    if axes is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def act_spec(axes: Optional[MeshAxes], *dims) -> P:
+    """Build a PartitionSpec from logical dim tags:
+    'dp' -> dp group, 'tp' -> model axis, None -> replicated."""
+    if axes is None:
+        return P()
+    out = []
+    for d in dims:
+        if d == "dp":
+            out.append(axes.dp if len(axes.dp) > 1 else axes.dp[0])
+        elif d == "tp":
+            out.append(axes.tp)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by path-name rules
+# ---------------------------------------------------------------------------
+
+# (substring match on the flattened path, spec-tags per dimension)
+# Order matters: first match wins.
+_RULES = [
+    # attention
+    ("wq", ("fsdp", "tp")),
+    ("wk", ("fsdp", "tp")),
+    ("wv", ("fsdp", "tp")),
+    ("wo", ("tp", "fsdp")),
+    # dense MLP
+    ("w_gate", ("fsdp", "tp")),
+    ("w_in", ("fsdp", "tp")),
+    ("w_out", ("tp", "fsdp")),
+    # MoE (leading expert dim) — matched before generic by dim count below
+    ("router", (None, None)),
+    # embeddings / head
+    ("embed", ("tp", "fsdp")),
+    ("lm_head", ("tp", "fsdp")),
+    # rwkv
+    ("w_r", ("fsdp", "tp")),
+    ("w_k", ("fsdp", "tp")),
+    ("w_v", ("fsdp", "tp")),
+    ("w_g", ("fsdp", "tp")),
+    ("w_o", ("tp", "fsdp")),
+    ("cm_k", ("fsdp", "tp")),
+    ("cm_v", ("tp", "fsdp")),
+    ("cm_r", ("fsdp", "tp")),
+    ("wl_a", ("fsdp", None)),
+    ("wl_b", (None, "fsdp")),
+    # mamba conv
+    ("conv_w", (None, "tp")),
+    ("conv_b", ("tp",)),
+]
+
+_MOE_3D = {"w_gate": ("tp", None, "fsdp"), "w_in": ("tp", None, "fsdp"),
+           "w_out": ("tp", "fsdp", None)}
+
+
+def _tags_to_spec(axes: MeshAxes, tags, ndim: int, stacked: int) -> P:
+    dims = []
+    for t in tags:
+        if t == "tp":
+            dims.append(axes.tp)
+        elif t == "fsdp":
+            dims.append(
+                (axes.dp if len(axes.dp) > 1 else axes.dp[0])
+                if axes.fsdp
+                else None
+            )
+        else:
+            dims.append(None)
+    # account for leading stacked layer/group dims
+    return P(*([None] * stacked + dims))
+
+
+def param_specs(axes: Optional[MeshAxes], params) -> object:
+    """Pytree of PartitionSpec matching `params` (by path rules).
+
+    Leaves under 'layers'/'groups' carry 1 (or 2: hybrid groups) leading
+    stacked dims which are never sharded.
+    """
+    if axes is None:
+        return jax.tree.map(lambda _: P(), params)
+
+    def spec_for(path, leaf) -> P:
+        names = [
+            p.key for p in path if isinstance(p, jax.tree_util.DictKey)
+        ]
+        pathstr = "/".join(names)
+        stacked = 0
+        if "layers" in names or "groups" in names:
+            stacked = 1
+            if "groups" in names:  # hybrid: [G, A, ...]
+                stacked = 2
+        eff_ndim = leaf.ndim - stacked
+        last = names[-1] if names else ""
+        # MoE expert tensors: leading E dim (3D after stacking)
+        if eff_ndim == 3 and last in _MOE_3D:
+            return _tags_to_spec(axes, _MOE_3D[last], leaf.ndim, stacked)
+        for key, tags in _RULES:
+            if last == key and len(tags) == eff_ndim:
+                return _tags_to_spec(axes, tags, leaf.ndim, stacked)
+        # default: replicate (norms, scalars, biases, mu/u vectors)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)

@@ -1,0 +1,218 @@
+"""Mamba2 block (chunked SSD) — zamba2's backbone mixer.
+
+State-space duality form ("Transformers are SSMs", Dao & Gu 2024),
+scalar-per-head A, shared B/C across heads (ngroups=1):
+
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t (x) x_t        (state [H,P,N])
+    y_t = C_t . h_t + D x_t
+
+Training runs a lax.scan over sequence *chunks*: within a chunk the
+quadratic (attention-like) form computes intra-chunk outputs, and the
+carried state provides the inter-chunk contribution — O(S*L) compute
+with only [B, L, L, H] transient memory (L = chunk length), never the
+full [S, S] matrix nor a materialized [S, H, P, N] state history.
+
+Decode is the O(1) recurrence on the carried state — this is what makes
+long_500k a constant-memory decode for the hybrid/ssm architectures
+(DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm
+
+Array = jax.Array
+
+
+def init_mamba2(
+    key: Array, d: int, d_inner: int, d_state: int, head_dim: int, d_conv: int = 4
+) -> dict:
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": jax.random.normal(
+            ks[0], (d, 2 * d_inner + 2 * d_state + n_heads), jnp.float32
+        )
+        * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (d_conv, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, float(n_heads), n_heads, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "w_out": jax.random.normal(ks[2], (d_inner, d), jnp.float32)
+        * d_inner ** -0.5,
+    }
+
+
+def _split_proj(p, x, d_inner, d_state, n_heads, dtype):
+    proj = x @ p["w_in"].astype(dtype)
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj,
+        [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state],
+        axis=-1,
+    )
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over [B, S, C] with kernel [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : xp.shape[1] - (K - 1 - i), :] * w[i][None, None, :]
+        for i in range(K)
+    )
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)).astype(
+        xBC.dtype
+    )
+
+
+def apply_mamba2(
+    p: dict,
+    x: Array,
+    *,
+    d_inner: int,
+    d_state: int,
+    head_dim: int,
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    """x: [B, S, d] -> [B, S, d] (training / prefill path).
+
+    With return_state=True also returns the decode state dict (final SSM
+    state from the chunk scan + the last d_conv-1 raw conv inputs), so
+    prefill hands decode an exact continuation point."""
+    Bsz, S, d = x.shape
+    dtype = x.dtype
+    H = d_inner // head_dim
+    P, N = head_dim, d_state
+    z, xs, Bc, Cc, dt = _split_proj(p, x, d_inner, d_state, H, dtype)
+    xBC_raw = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs, Bc, Cc = jnp.split(xBC, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H], negative
+    la = dt * A  # log decay per step [B,S,H]
+    xh = xs.reshape(Bsz, S, H, P).astype(jnp.float32)
+    xd = xh * dt[..., None]  # dt-scaled input
+    Bf = Bc.astype(jnp.float32)  # [B,S,N]
+    Cf = Cc.astype(jnp.float32)
+
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        xd = jnp.pad(xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // L
+
+    def to_chunks(a):
+        return a.reshape((Bsz, nc, L) + a.shape[2:]).swapaxes(0, 1)
+
+    las, xds, Bs, Cs = map(to_chunks, (la, xd, Bf, Cf))
+
+    def body(Hst, xs_):
+        la_c, xd_c, B_c, C_c = xs_  # [B,L,H], [B,L,H,P], [B,L,N], [B,L,N]
+        cums = jnp.cumsum(la_c, axis=1)  # [B,L,H]
+        total = cums[:, -1]  # [B,H]
+        # inter-chunk: y_i += C_i . (decay_i * H)
+        yin = jnp.einsum("bln,bhnp->blhp", C_c, Hst) * jnp.exp(cums)[..., None]
+        # intra-chunk quadratic form (mask inside the exp: the i<j
+        # entries have positive exponents that overflow to inf and would
+        # poison the product with NaN = inf * 0)
+        cb = jnp.einsum("bin,bjn->bij", C_c, B_c)  # [B,L,L]
+        mask = (
+            jnp.arange(L)[:, None] >= jnp.arange(L)[None, :]
+        )  # causal within chunk
+        diff = cums[:, :, None, :] - cums[:, None, :, :]  # [B,i,j,H]
+        dec = jnp.exp(jnp.where(mask[None, :, :, None], diff, -jnp.inf))
+        w = cb[..., None] * dec
+        yintra = jnp.einsum("bijh,bjhp->bihp", w, xd_c)
+        # state update
+        decay_j = jnp.exp(total[:, None, :] - cums)  # [B,L,H]
+        S_c = jnp.einsum("bjh,bjn,bjhp->bhnp", decay_j, B_c, xd_c)
+        H_new = jnp.exp(total)[..., None, None] * Hst + S_c
+        return H_new, yin + yintra
+
+    H0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    Hfin, ys = lax.scan(body, H0, (las, xds, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(Bsz, nc * L, H, P)[:, :S]
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype), p["norm"])
+    out = y @ p["w_out"].astype(dtype)
+    if not return_state:
+        return out
+    # Trailing-pad correction: padded steps have dt-scaled input 0 but a
+    # decay factor exp(0 * A) = 1, so the final carried state equals the
+    # state at position S-1 exactly — no correction needed.
+    K = p["conv_w"].shape[0]
+    tail = xBC_raw[:, max(S - (K - 1), 0) :]
+    if S < K - 1:
+        tail = jnp.pad(tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"ssm": Hfin, "conv": tail}
+
+
+def init_mamba2_state(
+    batch: int, d_inner: int, d_state: int, head_dim: int, d_conv: int = 4,
+    dtype=jnp.bfloat16,
+) -> dict:
+    H = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "ssm": jnp.zeros((batch, H, d_state, head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, conv_dim), dtype),
+    }
+
+
+def apply_mamba2_decode(
+    p: dict,
+    x: Array,
+    state: dict,
+    *,
+    d_inner: int,
+    d_state: int,
+    head_dim: int,
+) -> Tuple[Array, dict]:
+    """One-token decode. x: [B, 1, d]; O(1) state update."""
+    Bsz, _, d = x.shape
+    dtype = x.dtype
+    H = d_inner // head_dim
+    P, N = head_dim, d_state
+    z, xs, Bc, Cc, dt = _split_proj(p, x, d_inner, d_state, H, dtype)
+    xBC = jnp.concatenate([xs, Bc, Cc], axis=-1)  # [B,1,conv_dim]
+    conv_buf = jnp.concatenate([state["conv"].astype(dtype), xBC], axis=1)
+    K = p["conv_w"].shape[0]
+    out = (conv_buf * p["conv_w"].astype(dtype)[None]).sum(1) + p[
+        "conv_b"
+    ].astype(dtype)
+    xBC_t = jax.nn.silu(out.astype(jnp.float32)).astype(dtype)  # [B, conv_dim]
+    new_conv = conv_buf[:, 1:]
+    xs, Bc, Cc = jnp.split(xBC_t, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # [B,H]
+    xh = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)  # [B,N]
+    Cf = Cc.astype(jnp.float32)
+    hs = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bf, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cf, hs) + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype), p["norm"])
+    return y @ p["w_out"].astype(dtype), {"ssm": hs, "conv": new_conv}

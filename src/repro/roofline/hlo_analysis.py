@@ -1,0 +1,588 @@
+"""Loop-aware roofline extraction from compiled HLO.
+
+XLA's built-in `compiled.cost_analysis()` visits while-loop bodies ONCE
+(verified empirically: a 10-iteration scanned matmul reports the flops
+of one matmul), which would undercount every scanned layer stack by
+n_layers x.  This module re-derives the three roofline terms by walking
+the compiled HLO text itself:
+
+  * while ops carry `backend_config={"known_trip_count":{"n": ...}}` —
+    bodies/conditions are multiplied by their trip counts (nested loops
+    compose recursively: layers-scan x chunk-scan works);
+  * dot flops = 2 x elems(result) x contraction size (from
+    lhs_contracting_dims + the operand's shape);
+  * HBM-bytes model is fusion-aware: a fusion counts its operand+result
+    bytes once (its internals live in registers/VMEM) — the standard
+    roofline traffic model;
+  * collective bytes = sum of operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops (per-device
+    module => per-device bytes), accumulated per collective type.
+
+All numbers are per device (the module is the SPMD-partitioned
+per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue  # token/opaque
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total += elems * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    elems_total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        elems_total += elems
+    return elems_total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+def _split_op_line(line: str) -> Optional[Op]:
+    line = line.strip()
+    if not line.startswith("%") and not line.startswith("ROOT %"):
+        return None
+    is_root = line.startswith("ROOT ")
+    if is_root:
+        line = line[len("ROOT "):]
+    if " = " not in line:
+        return None
+    name, rhs = line.split(" = ", 1)
+    name = name.strip().lstrip("%")
+    rhs = rhs.strip()
+    # result type: balanced parens for tuples, else up to first space
+    if rhs.startswith("("):
+        depth = 0
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        rtype = rhs[: i + 1]
+        rest = rhs[i + 1 :].strip()
+    else:
+        sp = rhs.index(" ")
+        rtype = rhs[:sp]
+        rest = rhs[sp + 1 :].strip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    depth = 0
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    operand_str = rest[par + 1 : i]
+    attrs = rest[i + 1 :]
+    operands = re.findall(r"%([\w.\-]+)", operand_str)
+    return Op(name, rtype, opcode, operands, attrs, is_root)
+
+
+def parse_module(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", stripped)
+        if header and not line.startswith(" "):
+            current = header.group(1)
+            comps[current] = []
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            op = _split_op_line(line)
+            if op is not None:
+                comps[current].append(op)
+    return comps
+
+
+def find_entry(text: str, comps: Dict[str, List[Op]]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    # dtype-convert / transpose / copy traffic: CPU-backend lowering
+    # artifacts around bf16 dots that a TPU (native-bf16 MXU) would not
+    # execute; reported separately and excluded from the memory term.
+    layout_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.layout_bytes += other.layout_bytes * mult
+        for k, v in other.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0.0) + v * mult
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = shape_elems(op.result_type)
+    m = _LHS_C_RE.search(op.attrs)
+    contraction = 1
+    if m and op.operands:
+        lhs_type = shapes.get(op.operands[0], "")
+        dims = _shape_dims(lhs_type)
+        if m.group(1):
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(dims):
+                    contraction *= dims[di]
+    return 2.0 * out_elems * contraction
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = find_entry(text, self.comps)
+        self._memo: Dict[str, Cost] = {}
+        self.warnings: List[str] = []
+
+    def _operand_bytes(self, op: Op, shapes: Dict[str, str]) -> float:
+        return float(
+            sum(shape_bytes(shapes.get(o, "")) for o in op.operands)
+        )
+
+    _LAYOUT_OPS = {"copy", "transpose", "convert", "bitcast", "reshape"}
+
+    def _origin_dtype_bytes_per_elem(
+        self, name: str, defs: Dict[str, "Op"], depth: int = 0
+    ) -> Optional[float]:
+        """Walk back through layout-only ops to the original buffer's
+        dtype; None if unknown (loop parameters etc.)."""
+        if depth > 8 or name not in defs:
+            return None
+        op = defs[name]
+        if op.opcode in self._LAYOUT_OPS and op.operands:
+            return self._origin_dtype_bytes_per_elem(
+                op.operands[0], defs, depth + 1
+            )
+        m = _SHAPE_RE.search(op.result_type)
+        if m and m.group(1) in _DTYPE_BYTES:
+            return float(_DTYPE_BYTES[m.group(1)])
+        return None
+
+    # Ops through which a big buffer flows without forcing full
+    # materialization inside a fusion (computed lazily per element).
+    _UNARY_LAZY = {
+        "convert", "copy", "bitcast", "transpose", "reshape", "negate",
+        "multiply", "add", "subtract", "divide", "tanh", "exponential",
+        "select",
+    }
+
+    def _is_layout_only(self, comp_name: str) -> bool:
+        ops = self.comps.get(comp_name, [])
+        real = [
+            o for o in ops
+            if o.opcode not in _FREE_OPS and o.opcode not in self._LAYOUT_OPS
+            and o.opcode not in ("broadcast", "slice", "pad")
+        ]
+        return bool(ops) and not real
+
+    def _fusion_traffic(self, comp_name: str, op_shapes_outer, fusion_op) -> float:
+        """HBM traffic of one fusion execution (fusion-semantics-aware).
+
+        Inputs: each fusion parameter is read once in full — unless its
+        only (transitive, through lazily-computed elementwise ops) uses
+        are dynamic-slice/gather, in which case only the sliced regions
+        are read (fusion internals are computed lazily: a convert of a
+        whole KV cache feeding a slice materializes just the slice).
+        Output: the root's result is written once; a dynamic-update-
+        slice root writes (and read-modifies) only its update region.
+        """
+        ops = self.comps.get(comp_name)
+        if ops is None:
+            # no called comp: fall back to boundary
+            return self._operand_bytes(fusion_op, op_shapes_outer) + shape_bytes(
+                fusion_op.result_type
+            )
+        shapes = {op.name: op.result_type for op in ops}
+
+        # In-place-update pattern: XLA-CPU rewrites multi-dynamic-index
+        # dynamic-update-slice on a loop carry into a select-over-iota
+        # fusion whose result shape equals the carried buffer's shape.
+        # On TPU (with buffer aliasing) this is an in-place write of the
+        # small update region: charge only the small operands.
+        heavy = {"dot", "convolution", "reduce", "scatter", "gather",
+                 "reduce-window", "sort", "rng"}
+        if not any(o.opcode in heavy for o in ops):
+            root_t = next(
+                (o.result_type for o in ops if o.is_root), ops[-1].result_type
+            )
+            params = [o for o in ops if o.opcode == "parameter"]
+            big = [
+                p for p in params
+                if _shape_dims(p.result_type) == _shape_dims(root_t)
+                and shape_bytes(p.result_type) > (1 << 22)
+            ]
+            others = [p for p in params if p not in big]
+            # Only an in-place update if every non-destination input is
+            # small (the update region + indices); a loop fusion mixing
+            # several large tensors is NOT this pattern.
+            if big and all(
+                shape_bytes(p.result_type) < (1 << 22) for p in others
+            ):
+                small = sum(shape_bytes(p.result_type) for p in others)
+                return 2.0 * small  # read small inputs + write the region
+
+        users: Dict[str, List[Op]] = {}
+        for op in ops:
+            for o in op.operands:
+                users.setdefault(o, []).append(op)
+
+        def sliced_read_bytes(
+            name: str, per_elem: float
+        ) -> Optional[float]:
+            """Bytes read from buffer `name` if all its transitive uses
+            (through lazily-computed elementwise ops) are slice-like;
+            None if it is materialized in full (any non-lazy consumer or
+            a path to the fusion root).  BFS with dedup — diamond
+            dataflow must not multiply the charge."""
+            seen = set()
+            frontier = [name]
+            slice_ops: Dict[str, float] = {}
+            while frontier:
+                nm = frontier.pop()
+                if nm in seen:
+                    continue
+                seen.add(nm)
+                us = users.get(nm, [])
+                if not us:
+                    return None  # reaches the root: materialized in full
+                for u in us:
+                    if u.opcode in ("dynamic-slice", "gather"):
+                        slice_ops[u.name] = (
+                            shape_elems(u.result_type) * per_elem
+                        )
+                    elif (
+                        u.opcode == "dynamic-update-slice"
+                        and u.operands[0] == nm
+                    ):
+                        slice_ops[u.name] = float(
+                            shape_bytes(shapes.get(u.operands[1], ""))
+                        )
+                    elif u.opcode in self._UNARY_LAZY:
+                        frontier.append(u.name)
+                    else:
+                        return None
+            return sum(slice_ops.values())
+
+        traffic = 0.0
+        for op in ops:
+            if op.opcode != "parameter":
+                continue
+            full = shape_bytes(op.result_type)
+            if full < (1 << 20):  # small inputs: charge full, skip analysis
+                traffic += full
+                continue
+            m2 = _SHAPE_RE.search(op.result_type)
+            per_elem = float(_DTYPE_BYTES.get(m2.group(1), 4)) if m2 else 4.0
+            sliced = sliced_read_bytes(op.name, per_elem)
+            traffic += full if sliced is None else min(sliced, full)
+        # output side
+        root = next((o for o in ops if o.is_root), ops[-1])
+        roots = [root]
+        if root.opcode == "tuple":
+            roots = [
+                next((o for o in ops if o.name == n), None)
+                for n in root.operands
+            ]
+        defs = {o.name: o for o in ops}
+
+        def layout_chain_from_slice(name: str, depth: int = 0) -> bool:
+            # root value that is a pure layout transform of a slice: a
+            # TPU consumer reads the slice directly; the materialized
+            # transposed/converted copy is a CPU-lowering artifact
+            if depth > 10 or name not in defs:
+                return False
+            o = defs[name]
+            if o.opcode in ("dynamic-slice",):
+                return True
+            if o.opcode in self._LAYOUT_OPS and o.operands:
+                return layout_chain_from_slice(o.operands[0], depth + 1)
+            return False
+
+        for r in roots:
+            if r is None:
+                continue
+            if r.opcode == "dynamic-update-slice":
+                traffic += shape_bytes(shapes.get(r.operands[1], ""))
+            elif layout_chain_from_slice(r.name):
+                pass  # artifact write, excluded (slice read already charged)
+            else:
+                # intermediate materialization: charged once here (the
+                # write); consumer fusions charge the read as a param
+                traffic += shape_bytes(r.result_type)
+        return traffic
+
+    def analyze_comp(self, name: str, in_fusion: bool = False) -> Cost:
+        memo_key = f"{name}@{int(in_fusion)}"
+        if memo_key in self._memo:
+            return self._memo[memo_key]
+        cost = Cost()
+        ops = self.comps.get(name, [])
+        shapes = {op.name: op.result_type for op in ops}
+        for op in ops:
+            oc = op.opcode
+            if oc in _FREE_OPS:
+                continue
+            if oc == "while":
+                trip = 1
+                m = _TRIP_RE.search(op.attrs)
+                if m:
+                    trip = int(m.group(1))
+                else:
+                    self.warnings.append(f"while without trip count in {name}")
+                body = _BODY_RE.search(op.attrs)
+                cond = _COND_RE.search(op.attrs)
+                if body:
+                    cost.add(self.analyze_comp(body.group(1)), trip)
+                if cond:
+                    cost.add(self.analyze_comp(cond.group(1)), trip + 1)
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                m = _CALLS_RE.search(op.attrs) or re.search(
+                    r"to_apply=%?([\w.\-]+)", op.attrs
+                )
+                if m:
+                    sub = self.analyze_comp(m.group(1), in_fusion=True)
+                    # flops recurse; traffic via fusion-semantics model
+                    cost.flops += sub.flops
+                    cost.collective_bytes += sub.collective_bytes
+                    for k, v in sub.per_collective.items():
+                        cost.per_collective[k] = (
+                            cost.per_collective.get(k, 0.0) + v
+                        )
+                    traffic = self._fusion_traffic(m.group(1), shapes, op)
+                    if self._is_layout_only(m.group(1)):
+                        cost.layout_bytes += traffic
+                    else:
+                        cost.bytes += traffic
+                else:
+                    cost.bytes += self._operand_bytes(op, shapes) + shape_bytes(
+                        op.result_type
+                    )
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", op.attrs)
+                names = (
+                    re.findall(r"%?([\w.\-]+)", branches[0]) if branches else []
+                )
+                if not names:
+                    tc = re.search(r"true_computation=%?([\w.\-]+)", op.attrs)
+                    fc = re.search(r"false_computation=%?([\w.\-]+)", op.attrs)
+                    names = [m.group(1) for m in (tc, fc) if m]
+                sub_costs = [self.analyze_comp(n) for n in names]
+                if sub_costs:
+                    worst = max(sub_costs, key=lambda c: c.flops)
+                    cost.add(worst)
+                continue
+            if any(oc.startswith(c) for c in COLLECTIVES):
+                b = self._operand_bytes(op, shapes)
+                cost.collective_bytes += b
+                key = next(c for c in COLLECTIVES if oc.startswith(c))
+                cost.per_collective[key] = cost.per_collective.get(key, 0.0) + b
+                cost.bytes += b + shape_bytes(op.result_type)
+                continue
+            if oc in ("dot", "dot-general"):
+                cost.flops += _dot_flops(op, shapes)
+                defs = {o.name: o for o in ops}
+                ob = 0.0
+                for o in op.operands:
+                    d = defs.get(o)
+                    if d is not None and d.opcode in ("fusion", "call"):
+                        # the buffer behind this operand was already
+                        # charged when the producing fusion wrote it
+                        continue
+                    t = shapes.get(o, "")
+                    per = self._origin_dtype_bytes_per_elem(o, defs)
+                    if per is None:
+                        ob += shape_bytes(t)
+                    else:
+                        ob += shape_elems(t) * per
+                cost.bytes += ob + shape_bytes(op.result_type)
+                continue
+            if oc == "convolution":
+                # rare in this codebase; approximate via result elems x
+                # kernel elems / output-features
+                cost.flops += 2.0 * shape_elems(op.result_type) * max(
+                    shape_elems(shapes.get(op.operands[1], "")) // max(
+                        _shape_dims(op.result_type)[-1], 1
+                    ),
+                    1,
+                )
+                cost.bytes += self._operand_bytes(op, shapes) + shape_bytes(
+                    op.result_type
+                )
+                continue
+            if oc == "custom-call":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    cost.add(self.analyze_comp(m.group(1)))
+                cost.bytes += self._operand_bytes(op, shapes) + shape_bytes(
+                    op.result_type
+                )
+                continue
+            if oc in self._LAYOUT_OPS:
+                cost.layout_bytes += self._operand_bytes(op, shapes) + \
+                    shape_bytes(op.result_type)
+                continue
+            if oc == "dynamic-update-slice":
+                upd = shape_bytes(shapes.get(op.operands[1], "")) if len(
+                    op.operands
+                ) > 1 else 0
+                cost.bytes += 2.0 * upd  # in-place: update read + write
+                continue
+            if oc == "dynamic-slice":
+                cost.bytes += 2.0 * shape_bytes(op.result_type)
+                continue
+            if oc in ("gather", "scatter"):
+                # random-access rows: traffic = touched region, not the
+                # whole table (embedding lookups, MoE dispatch)
+                touched = shape_bytes(op.result_type)
+                if oc == "scatter" and len(op.operands) > 2:
+                    touched = shape_bytes(shapes.get(op.operands[2], ""))
+                cost.bytes += 2.0 * touched
+                continue
+            # generic elementwise / data movement: 1 flop per output elem
+            # (skipped inside fusions: internals are computed lazily and
+            # a whole-buffer convert feeding a slice costs ~nothing),
+            # traffic at op boundary (outside fusions only)
+            if not in_fusion:
+                cost.flops += shape_elems(op.result_type)
+                cost.bytes += self._operand_bytes(op, shapes) + shape_bytes(
+                    op.result_type
+                )
+        self._memo[memo_key] = cost
+        return cost
+
+    def analyze(self) -> Cost:
+        return self.analyze_comp(self.entry)
+
+
+def analyze_hlo(text: str) -> dict:
+    a = Analyzer(text)
+    c = a.analyze()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "layout_bytes": c.layout_bytes,
+        "collective_bytes": c.collective_bytes,
+        "per_collective": dict(c.per_collective),
+        "warnings": a.warnings[:20],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+HW_V5E = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bw": 819e9,            # B/s per chip
+    "ici_bw": 50e9,             # B/s per link
+    "hbm_bytes": 16e9,          # capacity per chip
+}
+
+
+def roofline_terms(per_device: dict, hw: dict = HW_V5E) -> dict:
+    compute_s = per_device["flops"] / hw["peak_flops_bf16"]
+    memory_s = per_device["bytes"] / hw["hbm_bw"]
+    collective_s = per_device["collective_bytes"] / hw["ici_bw"]
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dom,
+        "bound_s": bound,
+        # roofline fraction: how much of the step the dominant term is —
+        # 1.0 means perfectly limited by one resource (no wasted overlap
+        # potential); we also report the useful-compute fraction
+        # separately (vs MODEL_FLOPS) in the tables.
+        "overlap_fraction": bound / total if total else 0.0,
+    }

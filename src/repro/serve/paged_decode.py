@@ -1,0 +1,121 @@
+"""Paged decode step — the full-model consumer of the NBBS page pool.
+
+For attention families (dense/moe/vlm/audio, and the hybrid's shared
+attention sites), the decode-time KV cache lives in a global page pool
+[L, P, page, Hkv, D] addressed through per-sequence block tables
+produced by `memory.PagedKVManager` (buddy runs).  Each decode step:
+
+  1. computes this token's K/V per layer,
+  2. scatters them into the pool page/slot given by the block table
+     (page = table[b, pos // page_tokens], slot = pos % page_tokens),
+  3. attends over the pages via `kernels.ops.paged_attention`
+     (Pallas on TPU, jnp reference elsewhere — same math).
+
+Per-sequence context lengths make this the continuous-batching step:
+sequences at different positions decode together in one jitted call.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import moe as moe_lib
+from repro.models.attention import apply_rope
+from repro.models.layers import apply_swiglu, embed, logits as lm_logits, rms_norm
+from repro.models.transformer import window_array
+
+Array = jax.Array
+
+
+def init_pool(
+    cfg: ArchConfig, num_pages: int, page_tokens: int, dtype=jnp.bfloat16
+) -> dict:
+    shape = (cfg.n_layers, num_pages, page_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    pool: dict,
+    block_tables: Array,  # [B, max_pages] int32, -1 padded
+    context_lens: Array,  # [B] int32 — tokens already in cache
+    tokens: Array,  # [B] int32 — the new token per sequence
+    *,
+    page_tokens: int,
+    impl: str = "auto",
+    dtype=jnp.bfloat16,
+) -> Tuple[Array, dict]:
+    """Returns (logits [B, V], updated pool). Dense-family archs only."""
+    assert cfg.family in ("dense", "moe", "vlm", "audio"), cfg.family
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens[:, None], dtype, scale=cfg.embed_scale)
+    positions = context_lens[:, None]  # this token's position per seq
+    windows = window_array(cfg)
+
+    # page/slot of the new token per sequence
+    page_idx = block_tables[
+        jnp.arange(B), context_lens // page_tokens
+    ]  # [B]
+    slot = context_lens % page_tokens
+
+    new_k, new_v = [], []
+
+    def body(x, xs):
+        lp, window, kp, vp = xs  # kp/vp: [P, page, Hkv, D] this layer
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = (h @ lp["attn"]["wq"].astype(dtype)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim
+        )
+        k = (h @ lp["attn"]["wk"].astype(dtype)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.head_dim
+        )
+        v = (h @ lp["attn"]["wv"].astype(dtype)).reshape(
+            B, 1, cfg.n_kv_heads, cfg.head_dim
+        )
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        # scatter this token's K/V into its page
+        kp = kp.at[page_idx, slot].set(k[:, 0])
+        vp = vp.at[page_idx, slot].set(v[:, 0])
+        o = ops.paged_attention(
+            q[:, 0],
+            kp,
+            vp,
+            block_tables,
+            context_lens + 1,
+            softcap=cfg.attn_softcap or None,
+            impl=impl,
+        )
+        # NOTE: sliding-window masking for local layers happens via
+        # context_lens clamping at the engine level (window pages are
+        # the only ones mapped); `window` kept for interface parity.
+        del window
+        h = o.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(dtype)
+        if cfg.post_norm:
+            h = rms_norm(h, lp["ln1_post"], cfg.norm_eps)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            h, _ = moe_lib.apply_moe(
+                lp["moe"], h, top_k=cfg.top_k,
+                capacity_factor=float(cfg.n_experts), dtype=dtype,
+            )
+        else:
+            h = apply_swiglu(lp["mlp"], h, dtype=dtype)
+        if cfg.post_norm:
+            h = rms_norm(h, lp["ln2_post"], cfg.norm_eps)
+        return x + h, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], windows, pool["k"], pool["v"])
+    )
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    lg = lm_logits(h[:, 0], table, cfg.final_softcap or None)
+    return lg, {"k": ks, "v": vs}

@@ -1,0 +1,169 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp
+oracles across shape/dtype sweeps (per-kernel allclose)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.concurrent import TreeConfig, wavefront_alloc
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.nbbs_alloc import wavefront_alloc_pallas
+from repro.kernels.ops import flash_attention, nbbs_wavefront_alloc, paged_attention
+from repro.kernels.paged_attention import paged_attention as paged_pallas
+from repro.kernels.ref import mha_reference, paged_attention_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,D,Hq,Hkv", [
+        (128, 32, 4, 4),    # MHA
+        (256, 64, 8, 2),    # GQA
+        (192, 16, 2, 1),    # MQA, non-128 seq
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, S, D, Hq, Hkv, dtype):
+        B = 2
+        q = rand(jax.random.fold_in(KEY, 1), (B, Hq, S, D), dtype)
+        k = rand(jax.random.fold_in(KEY, 2), (B, Hkv, S, D), dtype)
+        v = rand(jax.random.fold_in(KEY, 3), (B, Hkv, S, D), dtype)
+        out = flash_attention_fwd(q, k, v, block_q=64, block_k=64)
+        ref = mha_reference(q, k, v)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+    @pytest.mark.parametrize("variant", [
+        dict(causal=False),
+        dict(causal=True, window=64),
+        dict(causal=True, softcap=30.0),
+        dict(causal=True, window=96, softcap=50.0),
+    ])
+    def test_variants(self, variant):
+        B, Hq, Hkv, S, D = 1, 4, 2, 256, 32
+        q = rand(jax.random.fold_in(KEY, 4), (B, Hq, S, D), jnp.float32)
+        k = rand(jax.random.fold_in(KEY, 5), (B, Hkv, S, D), jnp.float32)
+        v = rand(jax.random.fold_in(KEY, 6), (B, Hkv, S, D), jnp.float32)
+        out = flash_attention_fwd(q, k, v, block_q=64, block_k=64, **variant)
+        ref = mha_reference(q, k, v, **variant)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5
+        )
+
+    @pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+    def test_block_size_sweep(self, bq, bk):
+        B, Hq, Hkv, S, D = 1, 2, 2, 256, 32
+        q = rand(jax.random.fold_in(KEY, 7), (B, Hq, S, D), jnp.float32)
+        k = rand(jax.random.fold_in(KEY, 8), (B, Hkv, S, D), jnp.float32)
+        v = rand(jax.random.fold_in(KEY, 9), (B, Hkv, S, D), jnp.float32)
+        out = flash_attention_fwd(q, k, v, block_q=bq, block_k=bk)
+        ref = mha_reference(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5
+        )
+
+    def test_gradients_match_reference(self):
+        B, Hq, Hkv, S, D = 1, 4, 2, 128, 32
+        q = rand(jax.random.fold_in(KEY, 10), (B, Hq, S, D), jnp.float32)
+        k = rand(jax.random.fold_in(KEY, 11), (B, Hkv, S, D), jnp.float32)
+        v = rand(jax.random.fold_in(KEY, 12), (B, Hkv, S, D), jnp.float32)
+        g1 = jax.grad(
+            lambda q, k, v: flash_attention(q, k, v, impl="interpret").sum(),
+            argnums=(0, 1, 2),
+        )(q, k, v)
+        g2 = jax.grad(
+            lambda q, k, v: flash_attention(q, k, v, impl="reference").sum(),
+            argnums=(0, 1, 2),
+        )(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("page,maxp,Hq,Hkv,D", [
+        (16, 8, 4, 2, 64),
+        (8, 16, 8, 8, 32),
+        (32, 4, 2, 1, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, page, maxp, Hq, Hkv, D, dtype):
+        B, P = 3, 64
+        kp = rand(jax.random.fold_in(KEY, 20), (P, page, Hkv, D), dtype)
+        vp = rand(jax.random.fold_in(KEY, 21), (P, page, Hkv, D), dtype)
+        q = rand(jax.random.fold_in(KEY, 22), (B, Hq, D), dtype)
+        rng = np.random.default_rng(0)
+        bt = np.full((B, maxp), -1, np.int32)
+        cl = np.zeros((B,), np.int32)
+        for b in range(B):
+            n = int(rng.integers(1, maxp + 1))
+            bt[b, :n] = rng.choice(P, size=n, replace=False)
+            cl[b] = int(rng.integers(1, n * page + 1))
+        out = paged_pallas(q, kp, vp, jnp.asarray(bt), jnp.asarray(cl))
+        ref = paged_attention_reference(q, kp, vp, jnp.asarray(bt), jnp.asarray(cl))
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol,
+        )
+
+    def test_softcap(self):
+        B, P, page, maxp, Hq, Hkv, D = 2, 16, 8, 4, 4, 2, 32
+        kp = rand(jax.random.fold_in(KEY, 23), (P, page, Hkv, D), jnp.float32)
+        vp = rand(jax.random.fold_in(KEY, 24), (P, page, Hkv, D), jnp.float32)
+        q = rand(jax.random.fold_in(KEY, 25), (B, Hq, D), jnp.float32)
+        bt = jnp.asarray([[0, 1, 2, 3], [4, 5, -1, -1]], jnp.int32)
+        cl = jnp.asarray([30, 12], jnp.int32)
+        out = paged_pallas(q, kp, vp, bt, cl, softcap=20.0)
+        ref = paged_attention_reference(q, kp, vp, bt, cl, softcap=20.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+class TestNBBSKernel:
+    @pytest.mark.parametrize("depth,K,seed", [
+        (6, 16, 0), (9, 64, 1), (8, 33, 2), (10, 128, 3),
+    ])
+    def test_matches_jnp_wavefront(self, depth, K, seed):
+        cfg = TreeConfig(depth=depth, max_level=0)
+        rng = np.random.default_rng(seed)
+        levels = jnp.asarray(
+            rng.integers(2, depth + 1, size=K), jnp.int32
+        )
+        t0 = cfg.empty_tree()
+        t1, n1, ok1, _ = wavefront_alloc(cfg, t0, levels, jnp.ones(K, bool))
+        t2, n2, ok2, stats = wavefront_alloc_pallas(cfg, t0, levels)
+        assert (np.asarray(t1) == np.asarray(t2)).all()
+        assert (np.asarray(n1) == np.asarray(n2)).all()
+
+    def test_on_fragmented_tree(self):
+        cfg = TreeConfig(depth=8, max_level=0)
+        tree = cfg.empty_tree()
+        # fragment: allocate some, free alternating
+        tree, nodes, ok, _ = wavefront_alloc(
+            cfg, tree, jnp.full(32, 8, jnp.int32), jnp.ones(32, bool)
+        )
+        from repro.core.concurrent import free_batch
+        tree, _ = free_batch(cfg, tree, nodes[::2], jnp.ones(16, bool))
+        levels = jnp.asarray([4, 5, 8, 8, 6], jnp.int32)
+        t1, n1, ok1, _ = wavefront_alloc(cfg, tree, levels, jnp.ones(5, bool))
+        t2, n2, ok2, _ = wavefront_alloc_pallas(cfg, tree, levels)
+        assert (np.asarray(t1) == np.asarray(t2)).all()
+        assert (np.asarray(n1) == np.asarray(n2)).all()
+
+    def test_ops_dispatch(self):
+        cfg = TreeConfig(depth=6, max_level=0)
+        levels = jnp.asarray([3, 4, 5], jnp.int32)
+        t1, n1, ok1, s1 = nbbs_wavefront_alloc(
+            cfg, cfg.empty_tree(), levels, impl="interpret"
+        )
+        t2, n2, ok2, s2 = nbbs_wavefront_alloc(
+            cfg, cfg.empty_tree(), levels, impl="reference"
+        )
+        assert (np.asarray(t1) == np.asarray(t2)).all()
+        assert int(s1["rounds"]) == int(s2["rounds"])

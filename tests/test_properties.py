@@ -1,0 +1,155 @@
+"""Hypothesis property tests: the paper's safety/progress guarantees.
+
+S1 (Theorem A.2): a successful allocation returns a non-overlapping,
+size-coherent address range.
+S2 (Theorem A.3): a correct free releases exactly what was allocated.
+Progress (lock-freedom analogue): every wavefront round commits or
+definitively fails at least one request.
+Plus: packed-bunch trace equivalence and full-coalescing recovery.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bunch import BunchBuddy
+from repro.core.concurrent import TreeConfig, free_batch, wavefront_alloc
+from repro.core.ref import NBBSRef
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def op_stream(max_ops=80):
+    """(is_alloc, size_choice_or_free_index) streams."""
+    return st.lists(
+        st.tuples(st.booleans(), st.integers(0, 10 ** 6)),
+        min_size=1,
+        max_size=max_ops,
+    )
+
+
+def run_trace(alloc, ops, total, min_size):
+    """Replays a trace; returns live {addr: block_size} and checks S1."""
+    live = {}
+    sizes = [min_size, min_size, 2 * min_size, 4 * min_size,
+             8 * min_size, total // 4, total]
+    for is_alloc, r in ops:
+        if not is_alloc and live:
+            addr = sorted(live)[r % len(live)]
+            alloc.nb_free(addr)
+            del live[addr]
+        else:
+            size = sizes[r % len(sizes)]
+            a = alloc.nb_alloc(size)
+            if a is not None:
+                blk = min_size
+                while blk < size:
+                    blk *= 2
+                # S1: in-bounds, aligned, disjoint from all live blocks
+                assert 0 <= a and a + blk <= total
+                assert a % blk == 0  # AX2
+                for o, ob in live.items():
+                    assert a + blk <= o or o + ob <= a, "overlap!"
+                live[a] = blk
+    return live
+
+
+@given(op_stream())
+@settings(**SETTINGS)
+def test_s1_no_overlap_ref(ops):
+    a = NBBSRef(1024, 8)
+    run_trace(a, ops, 1024, 8)
+
+
+@given(op_stream())
+@settings(**SETTINGS)
+def test_s2_free_restores_state_ref(ops):
+    a = NBBSRef(1024, 8)
+    live = run_trace(a, ops, 1024, 8)
+    for addr in list(live):
+        a.nb_free(addr)
+    a.check_invariants()
+    # the ultimate S2 corollary: everything coalesces back to the root
+    assert a.nb_alloc(1024) == 0
+
+
+@given(op_stream(), st.sampled_from([(4, 64), (3, 32), (2, 32)]))
+@settings(**SETTINGS)
+def test_bunch_equals_ref_on_any_trace(ops, bw):
+    B, w = bw
+    ref = NBBSRef(1024, 8)
+    bb = BunchBuddy(1024, 8, bunch_levels=B, word_bits=w)
+    sizes = [8, 8, 16, 32, 64, 256, 1024]
+    live = []
+    for is_alloc, r in ops:
+        if not is_alloc and live:
+            addr = live.pop(r % len(live))
+            ref.nb_free(addr)
+            bb.nb_free(addr)
+        else:
+            size = sizes[r % len(sizes)]
+            a1, a2 = ref.nb_alloc(size), bb.nb_alloc(size)
+            assert a1 == a2
+            if a1 is not None:
+                live.append(a1)
+    assert ref.free_bytes() == bb.free_bytes()
+
+
+@given(
+    st.lists(st.integers(2, 6), min_size=1, max_size=24),
+    st.integers(0, 2 ** 31 - 1),
+)
+@settings(**SETTINGS)
+def test_wavefront_s1_and_progress(levels, seed):
+    cfg = TreeConfig(depth=6, max_level=0)
+    lv = jnp.asarray(levels, jnp.int32)
+    tree, nodes, ok, stats = wavefront_alloc(
+        cfg, cfg.empty_tree(), lv, jnp.ones(len(levels), bool)
+    )
+    nodes = np.asarray(nodes)
+    ok = np.asarray(ok)
+    # progress: bounded rounds (>=1 commit-or-fail per round)
+    assert int(stats["rounds"]) <= len(levels) + 1
+    # S1 on the wavefront outcome: winners' address ranges disjoint
+    spans = []
+    for n, o, l in zip(nodes, ok, levels):
+        if not o:
+            continue
+        level = int(n).bit_length() - 1
+        size = 64 >> level
+        start = (int(n) - (1 << level)) * size
+        for s0, s1 in spans:
+            assert start + size <= s0 or s1 <= start
+        spans.append((start, start + size))
+    # free everything: tree returns to all-zero (S2 corollary)
+    tree, _ = free_batch(cfg, tree, jnp.asarray(nodes), jnp.asarray(ok))
+    assert (np.asarray(tree) == 0).all()
+
+
+@given(op_stream(40))
+@settings(max_examples=20, deadline=None)
+def test_wavefront_matches_ref_single_requests(ops):
+    """K=1 wavefronts replay the sequential specification exactly."""
+    cfg = TreeConfig(depth=5, max_level=0)
+    tree = cfg.empty_tree()
+    ref = NBBSRef(32, 1)
+    live = []
+    for is_alloc, r in ops:
+        if not is_alloc and live:
+            node = live.pop(r % len(live))
+            tree, _ = free_batch(
+                cfg, tree, jnp.asarray([node], jnp.int32), jnp.ones(1, bool)
+            )
+            ref.nb_free(ref.starting_address(node))
+        else:
+            lv = r % 6
+            tree, nodes, ok, _ = wavefront_alloc(
+                cfg, tree, jnp.asarray([lv], jnp.int32), jnp.ones(1, bool)
+            )
+            a = ref.nb_alloc(32 >> lv)
+            if a is None:
+                assert not bool(ok[0])
+            else:
+                assert bool(ok[0])
+                live.append(int(nodes[0]))
+        assert (np.asarray(tree) == np.array(ref.tree)).all()

@@ -1,0 +1,147 @@
+"""Serving stack tests: NBBS page manager, continuous-batching engine,
+paged-vs-dense decode equivalence, admission control, fragmentation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.memory.kv_cache import PagedKVManager
+from repro.models import init_params, prefill, decode_step
+from repro.serve.engine import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestPagedKVManager:
+    def test_admission_and_release(self):
+        kv = PagedKVManager(64, page_tokens=16)
+        assert kv.add_sequence(1, 100)  # -> 7 pages -> run of 8
+        assert kv.seqs[1].n_pages == 8
+        assert kv.free_pages() == 56
+        kv.free_sequence(1)
+        assert kv.free_pages() == 64
+
+    def test_block_table_contiguous_runs(self):
+        kv = PagedKVManager(64, page_tokens=16)
+        kv.add_sequence(1, 64)  # 4 pages, one buddy run
+        bt = kv.block_table(1, 8)
+        run = bt[bt >= 0]
+        assert len(run) == 4
+        assert (np.diff(run) == 1).all()  # buddy contiguity
+
+    def test_growth_by_doubling(self):
+        kv = PagedKVManager(64, page_tokens=4)
+        kv.add_sequence(1, 4)  # 1 page
+        for _ in range(12):
+            assert kv.append_tokens(1, 1)
+        s = kv.seqs[1]
+        assert s.n_pages >= kv.pages_for_tokens(s.n_tokens)
+        # O(log T) runs
+        assert len(s.runs) <= 4
+
+    def test_admission_control_when_full(self):
+        kv = PagedKVManager(16, page_tokens=16)
+        assert kv.add_sequence(1, 16 * 12)
+        assert not kv.add_sequence(2, 16 * 8)  # would exceed pool
+        assert 2 not in kv.seqs  # rollback left no partial allocation
+        kv.free_sequence(1)
+        assert kv.add_sequence(2, 16 * 8)
+
+    def test_fragmentation_stats(self):
+        kv = PagedKVManager(64, page_tokens=16)
+        ids = []
+        for i in range(8):
+            kv.add_sequence(i, 16 * 4)  # 4 pages each
+            ids.append(i)
+        for i in ids[::2]:
+            kv.free_sequence(i)
+        f = kv.fragmentation()
+        assert f["used_pages"] == 16
+        assert f["largest_run"] >= 4
+        # buddy coalescing: freeing neighbours re-creates large runs
+        for i in ids[1::2]:
+            kv.free_sequence(i)
+        assert kv.fragmentation()["largest_run"] == 64
+
+
+class TestServeEngine:
+    def _engine(self, **kw):
+        cfg = get_config("stablelm-3b").reduced()
+        params = init_params(cfg, KEY)
+        return cfg, params, ServeEngine(
+            cfg, params, num_pages=64, page_tokens=4, max_batch=4,
+            dtype=jnp.float32, **kw
+        )
+
+    def test_run_to_completion_and_full_release(self):
+        _, _, eng = self._engine()
+        rng = np.random.default_rng(0)
+        for i in range(6):
+            eng.submit(Request(
+                i,
+                rng.integers(0, 200, size=int(rng.integers(3, 9))).astype(np.int32),
+                max_new_tokens=5,
+            ))
+        eng.run_to_completion()
+        assert len(eng.completed) == 6
+        assert all(len(r.out_tokens) == 5 for r in eng.completed.values())
+        assert eng.kv.free_pages() == 64  # everything coalesced back
+
+    def test_paged_equals_dense_decode(self):
+        cfg, params, eng = self._engine()
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+        lg, cache = prefill(
+            cfg, params, {"tokens": jnp.asarray(prompt[None])},
+            max_len=16, dtype=jnp.float32,
+        )
+        t0 = int(np.argmax(np.asarray(lg)[0]))
+        lg_dense, _ = decode_step(
+            cfg, params, cache, jnp.asarray([t0], jnp.int32),
+            dtype=jnp.float32,
+        )
+        t1_dense = int(np.argmax(np.asarray(lg_dense)[0]))
+        eng.submit(Request(0, prompt, max_new_tokens=2))
+        eng.step()
+        req = (list(eng.completed.values()) or list(eng.running.values()))[0]
+        assert req.out_tokens[:2] == [t0, t1_dense]
+
+    def test_continuous_batching_mixed_positions(self):
+        _, _, eng = self._engine()
+        rng = np.random.default_rng(2)
+        eng.submit(Request(0, rng.integers(0, 200, 8).astype(np.int32), 6))
+        eng.step()  # req 0 starts decoding
+        eng.submit(Request(1, rng.integers(0, 200, 3).astype(np.int32), 4))
+        eng.run_to_completion()
+        assert len(eng.completed) == 2
+
+    def test_queueing_under_memory_pressure(self):
+        cfg = get_config("stablelm-3b").reduced()
+        params = init_params(cfg, KEY)
+        eng = ServeEngine(
+            cfg, params, num_pages=16, page_tokens=4, max_batch=8,
+            dtype=jnp.float32,
+        )
+        rng = np.random.default_rng(3)
+        for i in range(6):
+            eng.submit(Request(i, rng.integers(0, 200, 12).astype(np.int32), 8))
+        eng.step()
+        assert eng.stats["queued_full"] > 0  # admission control engaged
+        eng.run_to_completion(max_steps=500)
+        assert len(eng.completed) == 6  # but everyone eventually served
+
+
+class TestMoEServing:
+    def test_moe_engine(self):
+        cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+        params = init_params(cfg, KEY)
+        eng = ServeEngine(
+            cfg, params, num_pages=32, page_tokens=4, max_batch=2,
+            dtype=jnp.float32,
+        )
+        rng = np.random.default_rng(4)
+        eng.submit(Request(0, rng.integers(0, 200, 5).astype(np.int32), 3))
+        eng.run_to_completion()
+        assert len(eng.completed) == 1

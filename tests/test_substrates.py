@@ -1,0 +1,235 @@
+"""Substrate tests: data pipeline, optimizer, compression, checkpointing
+(incl. elastic restore), supervisor restart/straggler logic."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.optim import adamw
+from repro.optim.compression import (
+    compress,
+    decompress,
+    ef_roundtrip,
+    init_error_buf,
+)
+from repro.runtime.supervisor import (
+    FailureInjector,
+    SimulatedFailure,
+    StragglerDetector,
+    Supervisor,
+)
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestData:
+    def test_deterministic_and_seekable(self):
+        d = SyntheticLM(100, 16, 8, seed=3)
+        b1 = d.batch_at(5)
+        b2 = d.batch_at(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(
+            d.batch_at(6)["tokens"], b1["tokens"]
+        )
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticLM(100, 16, 4)
+        b = d.batch_at(0)
+        assert b["tokens"].shape == b["labels"].shape == (4, 16)
+
+    def test_host_sharding_partitions_global_batch(self):
+        full = SyntheticLM(100, 8, 8, seed=1).batch_at(2)
+        p0 = SyntheticLM(100, 8, 8, seed=1, process_index=0, process_count=2)
+        p1 = SyntheticLM(100, 8, 8, seed=1, process_index=1, process_count=2)
+        np.testing.assert_array_equal(
+            np.concatenate(
+                [p0.batch_at(2)["tokens"], p1.batch_at(2)["tokens"]]
+            ),
+            full["tokens"],
+        )
+
+    def test_prefetcher(self):
+        d = SyntheticLM(100, 8, 4)
+        it = Prefetcher(iter(d), depth=2)
+        a = next(it)
+        b = next(it)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        cfg = adamw.AdamWConfig(peak_lr=0.1, warmup_steps=1, total_steps=100)
+        params = {"w": jnp.asarray([2.0, -3.0])}
+        state = adamw.init(params)
+        for _ in range(100):
+            grads = {"w": 2 * params["w"]}
+            params, state, m = adamw.update(cfg, grads, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 0.2
+
+    def test_clipping(self):
+        cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=1)
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init(params)
+        _, _, m = adamw.update(
+            cfg, {"w": jnp.full(4, 100.0)}, state, params
+        )
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedule_shape(self):
+        cfg = adamw.AdamWConfig(
+            peak_lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1
+        )
+        assert float(adamw.schedule(cfg, jnp.asarray(0))) == 0.0
+        assert float(adamw.schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(adamw.schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        g = jax.random.normal(KEY, (1000,))
+        q, s = compress(g)
+        rec = decompress(q, s, g.shape)
+        assert float(jnp.abs(rec - g).max()) <= float(s.max()) + 1e-6
+
+    def test_error_feedback_accumulates(self):
+        g = {"w": jax.random.normal(KEY, (300,)) * 1e-3}
+        ebuf = init_error_buf(g)
+        rec, ebuf = ef_roundtrip(g, ebuf)
+        # the residual is carried, not lost
+        np.testing.assert_allclose(
+            np.asarray(rec["w"] + ebuf["w"]), np.asarray(g["w"]), atol=1e-6
+        )
+
+    def test_wire_volume(self):
+        q, s = compress(jnp.ones((4096,)))
+        assert q.dtype == jnp.int8
+        assert q.size == 4096 and s.size == 16  # 1B/elem + 1/256 scales
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self):
+        tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4))}}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_io=False)
+            mgr.save(7, tree)
+            assert mgr.latest_step() == 7
+            out = mgr.restore(7, like=tree)
+            np.testing.assert_array_equal(np.asarray(out["a"]),
+                                          np.asarray(tree["a"]))
+
+    def test_retention_gc(self):
+        tree = {"a": jnp.zeros(2)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_io=False)
+            for s in (1, 2, 3, 4):
+                mgr.save(s, tree)
+            assert mgr.all_steps() == [3, 4]
+
+    def test_corruption_detected(self):
+        tree = {"a": jnp.arange(5.0)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_io=False)
+            mgr.save(1, tree)
+            path = os.path.join(d, "step_00000001", "leaf_00000.npy")
+            with open(path, "r+b") as f:
+                f.seek(-1, 2)
+                f.write(b"\x00")
+            with pytest.raises(IOError):
+                mgr.restore(1, like=tree)
+
+    def test_async_save(self):
+        tree = {"a": jnp.arange(100.0)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_io=True)
+            mgr.save(1, tree)
+            mgr.wait()
+            assert mgr.latest_step() == 1
+
+    def test_elastic_restore_placement(self):
+        """Checkpoints are global arrays: restoring with different
+        shardings (a different mesh) is the same code path."""
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_io=False)
+            mgr.save(1, tree)
+            sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+            out = mgr.restore(1, like=tree, shardings={"w": sh})
+            np.testing.assert_array_equal(np.asarray(out["w"]),
+                                          np.asarray(tree["w"]))
+
+
+class TestSupervisor:
+    def _mk(self, d, fail_at=(), steps=20, ckpt_every=5):
+        cfg = get_config("stablelm-3b").reduced()
+        tcfg = TrainConfig(microbatches=1, remat=False, dtype=jnp.float32)
+        data = SyntheticLM(cfg.vocab_size, 8, 4)
+        step_jit = jax.jit(make_train_step(cfg, tcfg))
+
+        def make_state():
+            return init_train_state(cfg, tcfg, KEY)
+
+        def step_fn(state, idx):
+            return step_jit(state, data.batch_at(idx))
+
+        ckpt = CheckpointManager(d, async_io=False)
+        return Supervisor(
+            make_state, step_fn, ckpt, ckpt_every=ckpt_every,
+            failure_injector=FailureInjector(tuple(fail_at)),
+        )
+
+    def test_restart_resumes_from_checkpoint(self):
+        with tempfile.TemporaryDirectory() as d:
+            sup = self._mk(d, fail_at=(7,), steps=12)
+            sup.run(12)
+            assert sup.restarts == 1
+            steps_seen = [h["step"] for h in sup.history]
+            # steps 5 and 6 are replayed after the failure at 7
+            assert steps_seen.count(5) == 2 and steps_seen.count(6) == 2
+            assert steps_seen[-1] == 11
+
+    def test_too_many_failures_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            sup = self._mk(d, fail_at=(0,))
+            sup.max_restarts = 0
+            # failing at step 0 repeatedly (fires once) then resumes
+            with pytest.raises(SimulatedFailure):
+                sup.inject.fired.clear()
+                sup.max_restarts = -1
+                sup.run(2)
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(warmup=3, threshold_sigma=2.0)
+        for i in range(10):
+            det.observe(i, 0.10 + 0.001 * (i % 2))
+        assert det.observe(10, 1.0) is True
+        assert det.events[-1]["step"] == 10
+        # baseline stays clean: a normal step afterwards is not flagged
+        assert det.observe(11, 0.10) is False
+
+
+class TestTrainerLoop:
+    def test_loss_decreases_tiny_lm(self):
+        cfg = get_config("stablelm-3b").reduced()
+        tcfg = TrainConfig(
+            microbatches=2, remat=True, dtype=jnp.float32,
+            compress_grads=True,
+            optimizer=adamw.AdamWConfig(
+                peak_lr=3e-3, warmup_steps=5, total_steps=60
+            ),
+        )
+        data = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+        step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=0)
+        state = init_train_state(cfg, tcfg, KEY)
+        losses = []
+        for i in range(60):
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.2
