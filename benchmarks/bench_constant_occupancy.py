@@ -65,7 +65,11 @@ def run() -> None:
             pool[i] = (wa.alloc_batch(lv), lv)
         wa.block()
         dt = time.perf_counter() - t0
-        row("constant_occupancy", "nb-wavefront", w, OPS, dt)
+        merged, logical = wa.free_stats
+        row(
+            "constant_occupancy", "nb-wavefront", w, OPS, dt,
+            extra=f"free_merged={merged};free_logical={logical}",
+        )
 
 
 if __name__ == "__main__":

@@ -12,7 +12,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
-from repro.core.concurrent import TreeConfig, free_batch, wavefront_alloc
+from repro.core.concurrent import (
+    TreeConfig,
+    free_batch,
+    wavefront_alloc,
+    wavefront_free,
+    wavefront_step,
+)
 
 DEPTH = 14  # 16K units
 
@@ -45,6 +51,74 @@ def run() -> None:
                 f"merged={int(stats['merged_writes'])};"
                 f"logical={int(stats['logical_rmws'])}"
             ),
+        )
+
+    # free-side scaling: merged release pass vs per-free logical RMWs
+    for width in (1, 4, 16, 64, 256):
+        levels = jnp.asarray(
+            rng.integers(DEPTH - 6, DEPTH + 1, size=width), jnp.int32
+        )
+        tree, nodes, ok, _ = wavefront_alloc(
+            cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
+        )
+        # compile once, then time the merged release
+        t1, freed, fstats = wavefront_free(cfg, tree, nodes, ok)
+        jax.block_until_ready(t1)
+        t0 = time.perf_counter()
+        REPS = 20
+        for _ in range(REPS):
+            t1, freed, fstats = wavefront_free(cfg, tree, nodes, ok)
+        jax.block_until_ready(t1)
+        dt = time.perf_counter() - t0
+        row(
+            "wavefront_free_scaling", "nb-wavefront", width, REPS * width, dt,
+            extra=(
+                f"merged={int(fstats['merged_writes'])};"
+                f"logical={int(fstats['logical_rmws'])};"
+                f"freed={int(freed.sum())}"
+            ),
+        )
+
+    # Constant Occupancy workload (paper Fig. 11), release side: a skewed
+    # long-lived pool, then dealloc/realloc bursts at constant occupancy
+    # through wavefront_step — report free-side merged writes vs the
+    # paper's per-free RMW count (Fig. 7 metric, release side).
+    for width in (64, 256):
+        pool_levels = jnp.asarray(
+            np.concatenate([
+                rng.integers(DEPTH - 3, DEPTH + 1, size=3 * width // 4),
+                rng.integers(DEPTH - 7, DEPTH - 3, size=width - 3 * width // 4),
+            ]),
+            jnp.int32,
+        )
+        tree, pool_nodes, pool_ok, _ = wavefront_alloc(
+            cfg, cfg.empty_tree(), pool_levels, jnp.ones(width, bool)
+        )
+        merged_total = logical_total = 0
+        ROUNDS = 10
+        t0 = time.perf_counter()
+        for _ in range(ROUNDS):
+            # constant occupancy: free the pool burst, re-allocate the
+            # same levels in the same mixed step
+            tree, pool_nodes, pool_ok, stats = wavefront_step(
+                cfg, tree, pool_nodes, pool_ok, pool_levels,
+                jnp.ones(width, bool),
+            )
+            merged_total += int(stats["free_merged_writes"])
+            logical_total += int(stats["free_logical_rmws"])
+        jax.block_until_ready(tree)
+        dt = time.perf_counter() - t0
+        row(
+            "wavefront_constant_occupancy_free", "nb-wavefront", width,
+            2 * ROUNDS * width, dt,
+            extra=(
+                f"free_merged={merged_total};free_logical={logical_total};"
+                f"ratio={merged_total / max(logical_total, 1):.3f}"
+            ),
+        )
+        assert merged_total < logical_total, (
+            "merged release pass should beat per-free RMWs", merged_total,
+            logical_total,
         )
 
     # fragmented-tree behaviour: occupancy ~50% at mixed levels

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.baselines import FreeListBuddy, SpinlockTreeBuddy
 from repro.core.bunch import BunchBuddy
-from repro.core.concurrent import TreeConfig, free_batch, wavefront_alloc
+from repro.core.concurrent import TreeConfig, wavefront_alloc, wavefront_free
 from repro.core.ref import NBBSRef
 
 WIDTHS = (1, 2, 4, 8, 16, 32)
@@ -44,6 +44,10 @@ class WavefrontAllocator:
         self.tree = self.cfg.empty_tree()
         self.width = width
         self.total_units = total_units
+        # running free-side instrumentation (paper Fig. 7, release side);
+        # kept as device scalars so the timed loop never syncs
+        self._free_merged = jnp.int32(0)
+        self._free_logical = jnp.int32(0)
 
     def alloc_batch(self, levels: np.ndarray) -> np.ndarray:
         lv = jnp.asarray(levels, jnp.int32)
@@ -53,12 +57,19 @@ class WavefrontAllocator:
         return np.asarray(nodes)
 
     def free_batch_(self, nodes: np.ndarray) -> None:
-        self.tree, _ = free_batch(
+        self.tree, _, stats = wavefront_free(
             self.cfg,
             self.tree,
             jnp.asarray(nodes, jnp.int32),
             jnp.asarray(nodes > 0),
         )
+        self._free_merged = self._free_merged + stats["merged_writes"]
+        self._free_logical = self._free_logical + stats["logical_rmws"]
+
+    @property
+    def free_stats(self) -> tuple:
+        """(merged_writes, logical_rmws) accumulated over all frees."""
+        return int(self._free_merged), int(self._free_logical)
 
     def block(self):
         jax.block_until_ready(self.tree)

@@ -15,10 +15,19 @@ from repro.core.bunch import BunchBuddy  # noqa: F401
 from repro.core.concurrent import (  # noqa: F401
     TreeConfig,
     free_batch,
+    free_batch_sequential,
+    free_round,
     levels_from_sizes,
     wavefront_alloc,
+    wavefront_free,
     wavefront_step,
 )
-from repro.core.nbbs_jax import AllocState, init_state, nb_alloc, nb_free  # noqa: F401
+from repro.core.nbbs_jax import (  # noqa: F401
+    AllocState,
+    init_state,
+    nb_alloc,
+    nb_free,
+    nb_free_batch,
+)
 from repro.core.ref import NBBSRef, NBBSStats  # noqa: F401
 from repro.core.baselines import FreeListBuddy, SpinlockTreeBuddy  # noqa: F401

@@ -25,10 +25,24 @@ round with pending requests either commits at least one request or fails
 requests whose level is exhausted — the minimum-id winner always
 survives arbitration, mirroring Lemma A.3.
 
-Releases within a round are processed as a faithful sequential scan of
-FREENODE/UNMARK (coalescing-bit phases are not commutative, unlike the
-occupancy ORs); rounds interleave frees-then-allocs, which is one legal
-linearization.
+Releases get the same treatment (`free_round` / `wavefront_free`): the
+paper's FREENODE coalescing climb and UNMARK climb are not commutative
+word-by-word — two frees whose climbs meet at a shared ancestor, or a
+free racing an occupied buddy, produce different intermediate words
+depending on order.  But for a *batch* applied to a quiescent tree the
+order-dependence is confined to which climb clears the shared ancestor
+segment; the final state of every legal linearization is identical (the
+derived occupancy of paper Fig. 6).  The merged pass therefore (1)
+clears all released node words at once (F19, vectorized), then (2)
+resolves every meeting-point conflict in one bottom-up O(depth) sweep
+that re-derives the branch occupancy bits along touched paths — the OR
+over surviving sub-tree occupancy is exactly the fixed point all
+sequential climb orders converge to.  Frees the pass cannot prove valid
+(released word without OCC: double frees / junk handles) are dropped
+rather than allowed to corrupt ancestor marks like a replayed
+sequential climb would.  The faithful per-node scan survives as
+`free_batch_sequential`, the differential oracle for the merged pass.
+Rounds interleave frees-then-allocs, which is one legal linearization.
 
 Everything here is shape-static and jittable; the Pallas kernel
 (`kernels/nbbs_alloc.py`) implements the same per-round algorithm with
@@ -332,11 +346,12 @@ def _free_one(cfg: TreeConfig, tree: Array, n: Array) -> Tuple[Array, Array]:
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def free_batch(
+def free_batch_sequential(
     cfg: TreeConfig, tree: Array, nodes: Array, active: Array
 ) -> Tuple[Array, Array]:
-    """Release a batch of nodes (sequential scan — coalescing phases do
-    not commute; one legal linearization).  Returns (tree, writes)."""
+    """Release a batch of nodes one at a time (faithful FREENODE/UNMARK
+    scan; one legal linearization).  O(K·depth) serialized steps — kept
+    as the differential oracle for `free_round`.  Returns (tree, writes)."""
 
     def step(carry, x):
         tree, writes = carry
@@ -352,6 +367,127 @@ def free_batch(
     return tree, writes
 
 
+# ---------------------------------------------------------------------------
+# Merged vectorized release (free-side wavefront)
+# ---------------------------------------------------------------------------
+
+
+def _free_logical_rmws(
+    cfg: TreeConfig, tree: Array, tgt: Array, valid: Array
+) -> Array:
+    """Per-free run-alone RMW count of the sequential release (the paper's
+    per-thread cost): the FREENODE climb CASes one word per level until
+    the first ancestor whose buddy branch is occupied, UNMARK re-CASes the
+    same segment, plus the one plain write of F19 — i.e. 2·climb + 1 per
+    free, evaluated against the pre-round tree."""
+    ub = cfg.max_level
+    cur = jnp.where(valid, tgt, 1)
+    climb = jnp.zeros(tgt.shape, jnp.int32)
+    stopped = ~valid
+    for _ in range(cfg.depth - ub):
+        in_climb = ~stopped & (_level_of(cur) > ub)
+        parent = cur >> 1
+        pv = tree[parent]
+        climb = climb + jnp.where(in_climb, 1, 0)
+        buddy_occ = (pv & (OCC_RIGHT << (cur & 1))) != 0
+        stopped = stopped | ~in_climb | buddy_occ
+        cur = parent
+    return jnp.where(valid, 2 * climb + 1, 0).sum(dtype=jnp.int32)
+
+
+def free_round(
+    cfg: TreeConfig, tree: Array, nodes: Array, active: Array
+) -> Tuple[Array, Array, Array, Array]:
+    """One merged release pass: all of a batch's FREENODE/UNMARK climbs
+    applied in O(depth) level-sliced vector ops (the release-side mirror
+    of `alloc_round`; shared verbatim by the jnp drivers and the Pallas
+    kernel).
+
+    Phase 1 clears every released node word at once (F19).  Phase 2 is
+    one bottom-up sweep: alongside a sub-tree-occupancy OR (does this
+    sub-tree still contain a reserved node?), every non-OCC ancestor on a
+    touched path gets its branch occupancy bits re-derived from that OR
+    and its coalescing bits cleared.  Climbs that meet at a shared
+    ancestor — the non-commutative case that forces retry loops on x86 —
+    are resolved exactly: the OR is the fixed point every sequential
+    climb order converges to, so no residue needs a serialized replay.
+    Frees whose word lacks OCC (double free / junk handle) are dropped.
+
+    Returns (tree, merged_writes, logical_rmws, freed) — freed is the
+    bool[K] mask of frees actually applied; merged_writes counts words
+    the vector pass changed vs the paper's per-free logical_rmws.
+    """
+    K = nodes.shape[0]
+    nodes = nodes.astype(jnp.int32)
+    safe = jnp.clip(nodes, 0, cfg.n_words - 1)
+    valid = active & (nodes > 0) & ((tree[safe] & OCC) != 0)
+    tgt = jnp.where(valid, safe, 0)
+    # duplicate handles within one batch: min lane id wins (the same
+    # arbitration the alloc side uses), later duplicates are dropped so
+    # the freed mask and stats count each release exactly once
+    ids = jnp.arange(K, dtype=jnp.int32)
+    inf = jnp.iinfo(jnp.int32).max
+    own = jnp.full(cfg.n_words, inf, dtype=jnp.int32).at[tgt].min(
+        jnp.where(valid, ids, inf)
+    )
+    valid = valid & (own[tgt] == ids)
+    tgt = jnp.where(valid, tgt, 0)
+
+    logical = _free_logical_rmws(cfg, tree, tgt, valid)
+
+    # -- phase 1: release all node words (F19, vectorized) ------------------
+    freed = jnp.zeros(cfg.n_words, dtype=bool).at[tgt].set(valid)
+    freed = freed.at[0].set(False)
+    merged = freed.sum(dtype=jnp.int32)
+    tree = jnp.where(freed, 0, tree)
+
+    # -- phase 2: merged coalescing climb (FREENODE marks + UNMARK) ---------
+    sub_occ = (tree & OCC) != 0   # bottom-up: sub-tree still reserved?
+    touched = freed               # bottom-up: some climb passes through
+    for lev in range(cfg.depth - 1, cfg.max_level - 1, -1):
+        lo, hi = 1 << lev, 1 << (lev + 1)
+        c_occ = sub_occ[2 * lo : 2 * hi].reshape(-1, 2)
+        c_tch = touched[2 * lo : 2 * hi].reshape(-1, 2)
+        any_tch = c_tch[:, 0] | c_tch[:, 1]
+        pv = tree[lo:hi]
+        derived = jnp.where(c_occ[:, 0], OCC_LEFT, 0) | jnp.where(
+            c_occ[:, 1], OCC_RIGHT, 0
+        )
+        own_occ = (pv & OCC) != 0
+        nv = jnp.where(any_tch & ~own_occ, derived, pv)
+        tree = tree.at[lo:hi].set(nv)
+        merged = merged + (nv != pv).sum(dtype=jnp.int32)
+        sub_occ = sub_occ.at[lo:hi].set(own_occ | c_occ[:, 0] | c_occ[:, 1])
+        # OR, not overwrite: an interior freed node has untouched children
+        # but must still propagate its own release to its ancestors.
+        touched = touched.at[lo:hi].set(touched[lo:hi] | any_tch)
+    return tree, merged, logical, valid
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def wavefront_free(
+    cfg: TreeConfig, tree: Array, nodes: Array, active: Array
+) -> Tuple[Array, Array, dict]:
+    """Release a wavefront of nodes in one merged O(depth) pass.
+
+    Returns (tree, freed, stats) — freed bool[K]; stats mirrors
+    `wavefront_alloc` ('merged_writes' vs 'logical_rmws', the release
+    side of the paper's Fig. 7 metric)."""
+    tree, merged, logical, freed = free_round(cfg, tree, nodes, active)
+    return tree, freed, {"merged_writes": merged, "logical_rmws": logical}
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def free_batch(
+    cfg: TreeConfig, tree: Array, nodes: Array, active: Array
+) -> Tuple[Array, Array]:
+    """Release a batch of nodes via the merged vectorized pass.  Keeps the
+    historical (tree, writes) signature; writes is now the merged word-
+    update count.  Use `free_batch_sequential` for the faithful scan."""
+    tree, merged, _, _ = free_round(cfg, tree, nodes, active)
+    return tree, merged
+
+
 @functools.partial(jax.jit, static_argnums=(0, 6))
 def wavefront_step(
     cfg: TreeConfig,
@@ -362,14 +498,20 @@ def wavefront_step(
     alloc_active: Array,
     max_rounds: int = 64,
 ):
-    """One scheduler round: releases first, then the allocation wavefront
-    (one legal linearization of a mixed concurrent batch)."""
-    tree, free_writes = free_batch(cfg, tree, free_nodes, free_active)
+    """One scheduler round: the merged release pass first, then the
+    allocation wavefront (one legal linearization of a mixed concurrent
+    batch)."""
+    tree, free_merged, free_logical, freed = free_round(
+        cfg, tree, free_nodes, free_active
+    )
     tree, nodes, ok, stats = wavefront_alloc(
         cfg, tree, alloc_levels, alloc_active, max_rounds
     )
     stats = dict(stats)
-    stats["free_writes"] = free_writes
+    stats["free_writes"] = free_merged
+    stats["free_merged_writes"] = free_merged
+    stats["free_logical_rmws"] = free_logical
+    stats["freed"] = freed.sum(dtype=jnp.int32)
     return tree, nodes, ok, stats
 
 

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.concurrent import (
     TreeConfig,
-    free_batch,
+    free_round,
     levels_from_sizes,
     wavefront_alloc,
 )
@@ -65,14 +65,33 @@ def nb_alloc(
 
 def nb_free(cfg: TreeConfig, state: AllocState, unit_offset: Array) -> AllocState:
     """Release the chunk previously allocated at `unit_offset`."""
-    node = state.index[unit_offset]
-    tree, _ = free_batch(
-        cfg,
-        state.tree,
-        jnp.reshape(node, (1,)),
-        jnp.ones((1,), bool),
+    state, _ = nb_free_batch(
+        cfg, state, jnp.reshape(unit_offset, (1,)), jnp.ones((1,), bool)
     )
-    return AllocState(tree, state.index)
+    return state
+
+
+def nb_free_batch(
+    cfg: TreeConfig,
+    state: AllocState,
+    unit_offsets: Array,
+    active: Array,
+) -> Tuple[AllocState, Array]:
+    """Release a burst of chunks in one merged O(depth) pass — the
+    in-graph serving release path (a decode step retires many sequences'
+    pages at once; the whole burst costs one `free_round`, not a
+    per-chunk scan).  Returns (state, freed bool[K]); double frees and
+    junk offsets are dropped by the round's validity mask."""
+    unit_offsets = unit_offsets.astype(jnp.int32)
+    # out-of-range offsets are invalid handles, not aliases of unit 0
+    in_range = (unit_offsets >= 0) & (unit_offsets < (1 << cfg.depth))
+    offs = jnp.where(in_range, unit_offsets, 0)
+    nodes = state.index[offs]
+    tree, _, _, freed = free_round(cfg, state.tree, nodes, active & in_range)
+    # index[] keeps its stale entries, exactly like the paper's NBFREE —
+    # a re-free through a stale entry lands on a word without OCC and is
+    # dropped by free_round's validity mask.
+    return AllocState(tree, state.index), freed
 
 
 def nb_alloc_size(

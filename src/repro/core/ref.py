@@ -229,6 +229,13 @@ class NBBSRef:
         self._free_node(n, self.max_level)
         self.stats.frees += 1
 
+    def nb_free_many(self, addrs) -> None:
+        """Release a burst of allocations in one call (the release-side
+        batch API; this host oracle linearizes, device allocators process
+        the whole burst in one merged `free_round` pass)."""
+        for addr in addrs:
+            self.nb_free(addr)
+
     def _free_node(self, n: int, upper_bound: int) -> None:
         # -- phase 1: mark the path as coalescing, bottom-up ------------
         current = n >> 1

@@ -18,6 +18,12 @@ i.e. O(depth) (8,128)-lane vector ops per round regardless of how many
 requests commit — the vector-width limit of the paper's "one CAS per
 level per thread" cost model.
 
+The mixed entry point (`wavefront_step_pallas`) prepends the merged
+release pass (`free_round`): a whole burst of frees costs one O(depth)
+sweep — no retry rounds, since meeting-point conflicts are resolved by
+the bottom-up sub-tree-occupancy OR — before the allocation rounds run,
+all while the tree stays VMEM-resident.
+
 Grid: a single program; rounds run as a bounded fori_loop inside the
 kernel (conflict losers retry exactly like failed CAS).  BlockSpecs map
 the full tree / request vectors into VMEM — the deliberate tiling
@@ -44,7 +50,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.concurrent import TreeConfig, alloc_round
+from repro.core.concurrent import TreeConfig, alloc_round, free_round
 
 Array = jax.Array
 
@@ -89,6 +95,117 @@ def _wavefront_kernel(
     tree_out_ref[...] = tree
     nodes_ref[...] = nodes
     stats_ref[...] = jnp.stack([rounds, merged, logical])
+
+
+def _wavefront_step_kernel(
+    cfg: TreeConfig,
+    max_rounds: int,
+    tree_ref,
+    free_nodes_ref,
+    free_active_ref,
+    levels_ref,
+    active_ref,
+    tree_out_ref,
+    nodes_ref,
+    stats_ref,
+):
+    """Mixed round: the merged release pass (one O(depth) sweep — frees
+    never need retry rounds), then the allocation wavefront, all with the
+    tree VMEM-resident for the whole step."""
+    tree = tree_ref[...]
+    tree, free_merged, free_logical, freed = free_round(
+        cfg, tree, free_nodes_ref[...], free_active_ref[...] != 0
+    )
+    n_freed = freed.sum(dtype=jnp.int32)
+
+    levels = levels_ref[...]
+    pending = active_ref[...] != 0
+    K = levels.shape[0]
+    nodes = jnp.zeros((K,), dtype=jnp.int32)
+
+    def body(_, carry):
+        tree, nodes, pending, rounds, merged, logical = carry
+        live = pending.any()
+
+        def run(args):
+            tree, nodes, pending, rounds, merged, logical = args
+            tree, nodes, pending, m, l, _ = alloc_round(
+                cfg, tree, levels, pending, nodes
+            )
+            return tree, nodes, pending, rounds + 1, merged + m, logical + l
+
+        return lax.cond(
+            live, run, lambda a: a, (tree, nodes, pending, rounds, merged, logical)
+        )
+
+    tree, nodes, pending, rounds, merged, logical = lax.fori_loop(
+        0,
+        max_rounds,
+        body,
+        (tree, nodes, pending, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+    )
+    tree_out_ref[...] = tree
+    nodes_ref[...] = nodes
+    stats_ref[...] = jnp.stack(
+        [rounds, merged, logical, free_merged, free_logical, n_freed]
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "max_rounds", "interpret")
+)
+def wavefront_step_pallas(
+    cfg: TreeConfig,
+    tree: Array,
+    free_nodes: Array,
+    free_active: Array,
+    levels: Array,
+    max_rounds: int = 64,
+    *,
+    active: Array | None = None,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array, Array]:
+    """Mixed alloc+free Pallas entry point.
+
+    Returns (tree, nodes, ok, stats[6]) with stats = [alloc_rounds,
+    alloc_merged, alloc_logical, free_merged, free_logical, freed].
+    """
+    if active is None:
+        active = jnp.ones(levels.shape, dtype=jnp.int32)
+    else:
+        active = active.astype(jnp.int32)
+    K = levels.shape[0]
+    F = free_nodes.shape[0]
+    kernel = functools.partial(_wavefront_step_kernel, cfg, max_rounds)
+    tree_out, nodes, stats = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((cfg.n_words,), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((6,), jnp.int32),
+        ],
+        in_specs=[
+            pl.BlockSpec((cfg.n_words,), lambda: (0,)),  # full tree in VMEM
+            pl.BlockSpec((F,), lambda: (0,)),
+            pl.BlockSpec((F,), lambda: (0,)),
+            pl.BlockSpec((K,), lambda: (0,)),
+            pl.BlockSpec((K,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cfg.n_words,), lambda: (0,)),
+            pl.BlockSpec((K,), lambda: (0,)),
+            pl.BlockSpec((6,), lambda: (0,)),
+        ],
+        grid=(),
+        interpret=interpret,
+    )(
+        tree,
+        free_nodes.astype(jnp.int32),
+        free_active.astype(jnp.int32),
+        levels.astype(jnp.int32),
+        active,
+    )
+    return tree_out, nodes, nodes > 0, stats
 
 
 @functools.partial(

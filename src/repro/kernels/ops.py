@@ -22,10 +22,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.concurrent import TreeConfig
+from repro.core.concurrent import TreeConfig, wavefront_step
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.nbbs_alloc import wavefront_alloc_pallas
+from repro.kernels.nbbs_alloc import wavefront_alloc_pallas, wavefront_step_pallas
 from repro.kernels.paged_attention import paged_attention as paged_attention_pallas
 
 Array = jax.Array
@@ -175,4 +175,45 @@ def nbbs_wavefront_alloc(
         "rounds": stats[0],
         "merged_writes": stats[1],
         "logical_rmws": stats[2],
+    }
+
+
+def nbbs_wavefront_step(
+    cfg: TreeConfig,
+    tree: Array,
+    free_nodes: Array,
+    free_active: Array,
+    levels: Array,
+    *,
+    active: Array | None = None,
+    max_rounds: int = 64,
+    impl: str = "auto",
+):
+    """Mixed release+allocation round (frees via the merged vectorized
+    pass, then the alloc wavefront).  Returns (tree, nodes, ok, stats)."""
+    impl = _resolve(impl)
+    if active is None:
+        active = jnp.ones(levels.shape, dtype=bool)
+    if impl == "reference":
+        return wavefront_step(
+            cfg, tree, free_nodes, free_active, levels, active, max_rounds
+        )
+    tree, nodes, ok, stats = wavefront_step_pallas(
+        cfg,
+        tree,
+        free_nodes,
+        free_active,
+        levels,
+        max_rounds,
+        active=active,
+        interpret=(impl == "interpret"),
+    )
+    return tree, nodes, ok, {
+        "rounds": stats[0],
+        "merged_writes": stats[1],
+        "logical_rmws": stats[2],
+        "free_writes": stats[3],
+        "free_merged_writes": stats[3],
+        "free_logical_rmws": stats[4],
+        "freed": stats[5],
     }

@@ -87,22 +87,46 @@ class PagedKVManager:
         return True
 
     def append_tokens(self, seq_id: int, n_new: int = 1) -> bool:
-        """Reserve space for n_new more tokens; grows by buddy doubling."""
+        """Reserve space for n_new more tokens; grows by buddy doubling.
+        On failure the sequence is left exactly as before the call: both
+        n_tokens and any runs grown by earlier loop iterations are rolled
+        back (a partially grown sequence would silently leak pages the
+        token count never accounts for)."""
         s = self.seqs[seq_id]
+        n_runs_before = len(s.runs)
         s.n_tokens += n_new
         while self.pages_for_tokens(s.n_tokens) > s.n_pages:
             grow = min(self._next_pow2(max(s.n_pages, 1)), self.max_run_pages)
             addr = self.buddy.nb_alloc(grow, scattered=self.scattered)
             if addr is None:
                 s.n_tokens -= n_new
+                grown = s.runs[n_runs_before:]
+                del s.runs[n_runs_before:]
+                self.buddy.nb_free_many(r.start for r in grown)
                 return False
             s.runs.append(range(addr, addr + grow))
         return True
 
     def free_sequence(self, seq_id: int) -> None:
+        """Release a sequence: all of its runs go back in one burst call
+        (one merged release pass on wavefront-backed pools)."""
         s = self.seqs.pop(seq_id)
-        for r in s.runs:
-            self.buddy.nb_free(r.start)
+        self.buddy.nb_free_many(r.start for r in s.runs)
+
+    def free_sequences(self, seq_ids: List[int]) -> None:
+        """Batch eviction: release every run of every sequence in a
+        single burst.  Validates the whole batch before mutating any
+        state so an unknown id cannot strand already-popped sequences'
+        pages."""
+        unique = list(dict.fromkeys(seq_ids))
+        missing = [i for i in unique if i not in self.seqs]
+        if missing:
+            raise KeyError(missing[0])
+        addrs = []
+        for seq_id in unique:
+            s = self.seqs.pop(seq_id)
+            addrs.extend(r.start for r in s.runs)
+        self.buddy.nb_free_many(addrs)
 
     # ------------------------------------------------------------------
     def block_table(self, seq_id: int, max_pages: int) -> np.ndarray:

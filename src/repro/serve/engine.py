@@ -146,6 +146,7 @@ class ServeEngine:
         )
         nxt = np.argmax(np.asarray(lg), axis=-1)
         self.stats["steps"] += 1
+        retired = []
         for i, t in zip(ids, nxt):
             req = self.running[i]
             req.out_tokens.append(int(t))
@@ -155,10 +156,13 @@ class ServeEngine:
             hit_eos = self.eos is not None and int(t) == self.eos
             if len(req.out_tokens) >= req.max_new_tokens or hit_eos:
                 req.done = True
-                self.kv.free_sequence(i)
+                retired.append(i)
                 self.completed[i] = req
                 del self.running[i]
                 del self.ctx_lens[i]
+        if retired:
+            # all sequences finishing this step release as one burst
+            self.kv.free_sequences(retired)
         return len(self.running)
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:

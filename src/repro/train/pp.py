@@ -81,10 +81,15 @@ def pipeline_apply(
             return (buf, nxt), None
 
         # initial carry must be marked varying over the pipe axis (each
-        # stage's carry evolves independently between ppermutes)
+        # stage's carry evolves independently between ppermutes); JAX
+        # before 0.5 has no varying-type system (no lax.pcast) and needs
+        # no marking.
+        pcast = getattr(lax, "pcast", None)
+        mark_varying = (
+            (lambda a: pcast(a, (axis,), to="varying")) if pcast else (lambda a: a)
+        )
         init = jax.tree.map(
-            lambda a: lax.pcast(a, (axis,), to="varying"),
-            (buf, jnp.zeros(mb_shape, xs.dtype)),
+            mark_varying, (buf, jnp.zeros(mb_shape, xs.dtype))
         )
         (buf, _), _ = lax.scan(step, init, jnp.arange(steps))
         # broadcast the last stage's outputs to all stages (masked psum:

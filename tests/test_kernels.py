@@ -6,10 +6,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.concurrent import TreeConfig, wavefront_alloc
+from repro.core.concurrent import TreeConfig, wavefront_alloc, wavefront_step
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.nbbs_alloc import wavefront_alloc_pallas
-from repro.kernels.ops import flash_attention, nbbs_wavefront_alloc, paged_attention
+from repro.kernels.nbbs_alloc import wavefront_alloc_pallas, wavefront_step_pallas
+from repro.kernels.ops import (
+    flash_attention,
+    nbbs_wavefront_alloc,
+    nbbs_wavefront_step,
+    paged_attention,
+)
 from repro.kernels.paged_attention import paged_attention as paged_pallas
 from repro.kernels.ref import mha_reference, paged_attention_reference
 
@@ -167,3 +172,47 @@ class TestNBBSKernel:
         )
         assert (np.asarray(t1) == np.asarray(t2)).all()
         assert int(s1["rounds"]) == int(s2["rounds"])
+
+    @pytest.mark.parametrize("depth,K,F,seed", [
+        (6, 16, 8, 0), (8, 33, 16, 1), (9, 64, 64, 2),
+    ])
+    def test_mixed_step_matches_jnp(self, depth, K, F, seed):
+        """Kernel mixed alloc+free rounds (tree VMEM-resident for the
+        whole step) vs the jnp wavefront_step oracle."""
+        cfg = TreeConfig(depth=depth, max_level=0)
+        rng = np.random.default_rng(seed)
+        # fragment first so frees exercise real coalescing
+        tree, nodes, ok, _ = wavefront_alloc(
+            cfg, cfg.empty_tree(),
+            jnp.asarray(rng.integers(2, depth + 1, size=2 * F), jnp.int32),
+            jnp.ones(2 * F, bool),
+        )
+        fn = jnp.asarray(np.asarray(nodes)[:F], jnp.int32)
+        fa = jnp.asarray(np.asarray(ok)[:F])
+        levels = jnp.asarray(rng.integers(1, depth + 1, size=K), jnp.int32)
+        t1, n1, ok1, s1 = wavefront_step(
+            cfg, tree, fn, fa, levels, jnp.ones(K, bool)
+        )
+        t2, n2, ok2, s2 = wavefront_step_pallas(cfg, tree, fn, fa, levels)
+        assert (np.asarray(t1) == np.asarray(t2)).all()
+        assert (np.asarray(n1) == np.asarray(n2)).all()
+        assert int(s2[3]) == int(s1["free_merged_writes"])
+        assert int(s2[4]) == int(s1["free_logical_rmws"])
+        assert int(s2[5]) == int(s1["freed"])
+
+    def test_mixed_step_ops_dispatch(self):
+        cfg = TreeConfig(depth=6, max_level=0)
+        tree, nodes, ok, _ = wavefront_alloc(
+            cfg, cfg.empty_tree(), jnp.full(8, 6, jnp.int32), jnp.ones(8, bool)
+        )
+        fn, fa = nodes[:4], jnp.ones(4, bool)
+        levels = jnp.asarray([2, 5, 6], jnp.int32)
+        t1, n1, ok1, s1 = nbbs_wavefront_step(
+            cfg, tree, fn, fa, levels, impl="interpret"
+        )
+        t2, n2, ok2, s2 = nbbs_wavefront_step(
+            cfg, tree, fn, fa, levels, impl="reference"
+        )
+        assert (np.asarray(t1) == np.asarray(t2)).all()
+        assert (np.asarray(n1) == np.asarray(n2)).all()
+        assert int(s1["free_merged_writes"]) == int(s2["free_merged_writes"])

@@ -10,11 +10,22 @@ Plus: packed-bunch trace equivalence and full-coalescing recovery.
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core.bunch import BunchBuddy
-from repro.core.concurrent import TreeConfig, free_batch, wavefront_alloc
-from repro.core.ref import NBBSRef
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.bunch import BunchBuddy  # noqa: E402
+from repro.core.concurrent import (  # noqa: E402
+    TreeConfig,
+    free_batch,
+    free_batch_sequential,
+    wavefront_alloc,
+    wavefront_step,
+)
+from repro.core.ref import NBBSRef  # noqa: E402
 
 SETTINGS = dict(max_examples=40, deadline=None)
 
@@ -123,6 +134,93 @@ def test_wavefront_s1_and_progress(levels, seed):
         spans.append((start, start + size))
     # free everything: tree returns to all-zero (S2 corollary)
     tree, _ = free_batch(cfg, tree, jnp.asarray(nodes), jnp.asarray(ok))
+    assert (np.asarray(tree) == 0).all()
+
+
+@given(op_stream(40), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_vectorized_free_matches_sequential_scan(ops, seed):
+    """The merged O(depth) release pass is indistinguishable from the
+    faithful per-node FREENODE/UNMARK scan on any quiescent batch."""
+    cfg = TreeConfig(depth=5, max_level=0)
+    tree = cfg.empty_tree()
+    rng = np.random.default_rng(seed)
+    live = []
+    for is_alloc, r in ops:
+        if is_alloc or not live:
+            lv = jnp.asarray([r % 6], jnp.int32)
+            tree, nodes, ok, _ = wavefront_alloc(
+                cfg, tree, lv, jnp.ones(1, bool)
+            )
+            if bool(ok[0]):
+                live.append(int(nodes[0]))
+        else:
+            k = 1 + r % len(live)
+            idx = rng.choice(len(live), size=k, replace=False)
+            sel = [live[i] for i in idx]
+            live = [n for i, n in enumerate(live) if i not in set(idx.tolist())]
+            fn, fa = jnp.asarray(sel, jnp.int32), jnp.ones(k, bool)
+            t_seq, _ = free_batch_sequential(cfg, tree, fn, fa)
+            t_vec, _ = free_batch(cfg, tree, fn, fa)
+            assert (np.asarray(t_seq) == np.asarray(t_vec)).all()
+            tree = t_vec
+
+
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 2 ** 30), st.integers(0, 2 ** 30)),
+        min_size=2,
+        max_size=16,
+    )
+)
+@settings(max_examples=15, deadline=None)
+def test_wavefront_step_differential_vs_ref(bursts):
+    """Interleaved alloc/free bursts through wavefront_step (vectorized
+    release) vs NBBSRef replaying the same linearization: identical
+    trees (hence identical reachable occupancy per level), and every
+    failed request genuinely unsatisfiable on the post-step state."""
+    import copy
+
+    depth, K, F = 5, 4, 4
+    cfg = TreeConfig(depth=depth, max_level=0)
+    total = 1 << depth
+    tree = cfg.empty_tree()
+    ref = NBBSRef(total, 1)
+    live = []
+    for r_free, r_alloc in bursts:
+        k = r_free % (min(len(live), F) + 1) if live else 0
+        fnodes, keep = live[:k], live[k:]
+        live = keep
+        fn = np.zeros(F, np.int32)
+        fa = np.zeros(F, bool)
+        fn[:k] = fnodes
+        fa[:k] = True
+        a = 1 + r_alloc % K
+        lv = np.zeros(K, np.int32)
+        aa = np.zeros(K, bool)
+        lv[:a] = [(r_alloc >> (3 * i)) % (depth + 1) for i in range(a)]
+        aa[:a] = True
+        tree, nodes, ok, _ = wavefront_step(
+            cfg, tree, jnp.asarray(fn), jnp.asarray(fa),
+            jnp.asarray(lv), jnp.asarray(aa),
+        )
+        nodes, ok = np.asarray(nodes), np.asarray(ok)
+        for n in fnodes:
+            ref.nb_free(ref.starting_address(n))
+        for n, o in zip(nodes[:a], ok[:a]):
+            if o:
+                assert ref._try_alloc(int(n)) == 0
+                ref.index[ref.starting_address(int(n)) // ref.min_size] = int(n)
+                live.append(int(n))
+        assert (np.asarray(tree) == np.array(ref.tree)).all()
+        for L, o in zip(lv[:a], ok[:a]):
+            if not o:
+                assert copy.deepcopy(ref).nb_alloc(total >> int(L)) is None
+    # drain: everything coalesces back to an empty tree
+    if live:
+        tree, _ = free_batch(
+            cfg, tree, jnp.asarray(live, jnp.int32), jnp.ones(len(live), bool)
+        )
     assert (np.asarray(tree) == 0).all()
 
 

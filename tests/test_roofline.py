@@ -105,7 +105,8 @@ class TestTrafficModel:
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.roofline.hlo_analysis import analyze_hlo
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((4,), ("d",))
 x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
 w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
 xs = NamedSharding(mesh, P(None, "d"))

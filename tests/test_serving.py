@@ -49,6 +49,50 @@ class TestPagedKVManager:
         kv.free_sequence(1)
         assert kv.add_sequence(2, 16 * 8)
 
+    def test_append_tokens_failure_rolls_back_partial_growth(self):
+        """Regression: a failed grow must release runs appended by earlier
+        iterations of the same call — a partially grown sequence would
+        leak pages the token count never accounts for."""
+        kv = PagedKVManager(16, page_tokens=1, max_run_pages=2)
+        assert kv.add_sequence(1, 2)          # one run of 2 pages
+        assert kv.add_sequence(2, 8)          # 4 runs of 2
+        assert kv.add_sequence(3, 4)          # 2 runs of 2
+        assert kv.free_pages() == 2
+        # growing to 8 pages needs 3 more runs of 2; only one fits
+        assert not kv.append_tokens(1, 6)
+        s = kv.seqs[1]
+        assert s.n_tokens == 2                # token rollback
+        assert s.n_pages == 2                 # run rollback
+        assert kv.free_pages() == 2           # nothing leaked
+        # the sequence is still fully usable after the failed grow
+        kv.free_sequence(2)
+        kv.free_sequence(3)
+        assert kv.append_tokens(1, 6)
+        assert kv.seqs[1].n_pages >= kv.pages_for_tokens(8)
+
+    def test_free_sequences_batch_release(self):
+        kv = PagedKVManager(64, page_tokens=16)
+        for i in range(4):
+            assert kv.add_sequence(i, 16 * 4)
+        kv.free_sequences([0, 2])
+        assert kv.free_pages() == 56
+        assert set(kv.seqs) == {1, 3}
+        kv.free_sequences([1, 3])
+        assert kv.free_pages() == 64
+        kv.buddy.check_invariants()
+
+    def test_free_sequences_unknown_id_leaves_state_intact(self):
+        kv = PagedKVManager(64, page_tokens=16)
+        for i in range(2):
+            assert kv.add_sequence(i, 16 * 4)
+        with pytest.raises(KeyError):
+            kv.free_sequences([0, 99])
+        # nothing was popped or freed: the batch validates before mutating
+        assert set(kv.seqs) == {0, 1}
+        assert kv.free_pages() == 56
+        kv.free_sequences([0, 0, 1])  # duplicates collapse
+        assert kv.free_pages() == 64
+
     def test_fragmentation_stats(self):
         kv = PagedKVManager(64, page_tokens=16)
         ids = []
