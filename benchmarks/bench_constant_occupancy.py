@@ -11,15 +11,20 @@ from __future__ import annotations
 
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
     WIDTHS,
     WavefrontAllocator,
+    dump_bench_json,
     level_for,
     make_host_allocators,
     row,
 )
+from repro.core.concurrent import TreeConfig
+from repro.core.pool import PoolConfig, pool_wavefront_step
 
 TOTAL_MEM = 1 << 19
 MIN_SIZE = 8
@@ -70,6 +75,74 @@ def run() -> None:
             "constant_occupancy", "nb-wavefront", w, OPS, dt,
             extra=f"free_merged={merged};free_logical={logical}",
         )
+
+    # ---- sharded-pool sweep: constant-occupancy churn vs shard count ----
+    # The paper's own workload on the pool: a skewed long-lived pool of
+    # bursts, then dealloc/reallocate-at-the-same-size steps through
+    # pool_wavefront_step (frees and allocs in one mixed pool round) at
+    # equal total capacity for every S.  Reports rounds per churn step
+    # and the per-shard merged-vs-logical release ratio (Fig. 7 metric,
+    # release side, extended to the pool).
+    TOTAL_DEPTH = 12            # 4096 units, constant across S
+    W = 64                      # churn burst width
+    CHURN_STEPS = 12
+    shard_records = []
+    for S in (1, 2, 4, 8):
+        sd = TOTAL_DEPTH - (S.bit_length() - 1)
+        pcfg = PoolConfig(TreeConfig(depth=sd), S)
+        srng = np.random.default_rng(5)
+        sizes = 2 ** srng.integers(0, 9, size=W)   # mixed octaves ~72%
+        levels = jnp.asarray(sd - np.log2(sizes).astype(int), jnp.int32)
+        active = jnp.ones(W, bool)
+        trees = pcfg.empty_trees()
+        # pre-allocate the long-lived pool (no frees on the first step)
+        trees, nodes, shard, ok, _ = pool_wavefront_step(
+            pcfg, trees, jnp.zeros(W, jnp.int32), jnp.zeros(W, jnp.int32),
+            jnp.zeros(W, bool), levels, active,
+        )
+        jax.block_until_ready(trees)
+        rounds_total = merged_total = logical_total = 0
+        t0 = time.perf_counter()
+        for _ in range(CHURN_STEPS):
+            # constant occupancy: free the burst and re-allocate the
+            # same levels in the same mixed pool step
+            trees, nodes, shard, ok, stats = pool_wavefront_step(
+                pcfg, trees, nodes, shard, ok, levels, active,
+            )
+            rounds_total += int(stats["rounds"])
+            merged_total += int(stats["free_merged_writes"])
+            logical_total += int(stats["free_logical_rmws"])
+        jax.block_until_ready(trees)
+        dt = time.perf_counter() - t0
+        rec = {
+            "n_shards": S,
+            "shard_depth": sd,
+            "width": W,
+            "churn_steps": CHURN_STEPS,
+            "rounds_total": rounds_total,
+            "ok_final": int(ok.sum()),
+            "free_merged_writes": merged_total,
+            "free_logical_rmws": logical_total,
+            "free_ratio": merged_total / max(logical_total, 1),
+            "seconds": dt,
+        }
+        shard_records.append(rec)
+        row(
+            "constant_occupancy_shard_sweep", f"pool-s{S}", W,
+            2 * CHURN_STEPS * W, dt,
+            extra=(
+                f"rounds_total={rounds_total};"
+                f"free_merged={merged_total};free_logical={logical_total};"
+                f"ratio={rec['free_ratio']:.3f}"
+            ),
+        )
+        assert merged_total < logical_total, (
+            "merged pool release must beat per-free RMWs",
+            merged_total, logical_total,
+        )
+    dump_bench_json(
+        "BENCH_CONSTANT_OCCUPANCY_SHARDS.json", shard_records
+    )
 
 
 if __name__ == "__main__":

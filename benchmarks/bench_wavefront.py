@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import dump_bench_json, row
 from repro.core.concurrent import (
     TreeConfig,
     free_batch,
@@ -19,8 +19,17 @@ from repro.core.concurrent import (
     wavefront_free,
     wavefront_step,
 )
+from repro.core.pool import (
+    PoolConfig,
+    pool_wavefront_alloc,
+    pool_wavefront_free,
+)
 
 DEPTH = 14  # 16K units
+# Shard sweep geometry: equal total capacity for every S (a pool of S
+# trees of depth D-log2(S) holds exactly 2^D units).
+SHARD_TOTAL_DEPTH = 12
+SHARD_COUNTS = (1, 2, 4, 8)
 
 
 def run() -> None:
@@ -120,6 +129,88 @@ def run() -> None:
             "merged release pass should beat per-free RMWs", merged_total,
             logical_total,
         )
+
+    # ---- sharded-pool sweep: rounds-to-completion vs shard count ----
+    # A saturating mixed-octave burst (demand ~70-90% of capacity, every
+    # lane completes) at equal total capacity: S trees of depth
+    # D - log2(S).  One tree serializes the burst's nested conflict
+    # chains through 10+ arbitration rounds; splitting lanes across
+    # shards shortens each shard's chains, so the pool completes in
+    # fewer (vmapped, per-round-parallel) rounds.  Per-shard merged vs
+    # logical RMW stats extend the Fig. 7 metric to the pool.
+    shard_records = []
+    K = 64
+    srng = np.random.default_rng(3)
+    sizes = 2 ** srng.integers(0, 9, size=K)  # mixed octaves, ~72% demand
+    for S in SHARD_COUNTS:
+        sd = SHARD_TOTAL_DEPTH - (S.bit_length() - 1)
+        pcfg = PoolConfig(TreeConfig(depth=sd), S)
+        levels = jnp.asarray(sd - np.log2(sizes).astype(int), jnp.int32)
+        active = jnp.ones(K, bool)
+        # compile
+        trees, nodes, shard, ok, stats = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), levels, active
+        )
+        jax.block_until_ready(trees)
+        t0 = time.perf_counter()
+        REPS = 20
+        for _ in range(REPS):
+            trees, nodes, shard, ok, stats = pool_wavefront_alloc(
+                pcfg, pcfg.empty_trees(), levels, active
+            )
+        jax.block_until_ready(trees)
+        dt = time.perf_counter() - t0
+        # per-shard release stats: one merged free_round per shard
+        # (what pool_free_round vmaps), recorded shard-by-shard
+        from repro.core.concurrent import free_round as _free_round
+
+        free_ms, free_ls = [], []
+        for s in range(S):
+            mask = ok & (shard == s)
+            _, m_s, l_s, _ = _free_round(pcfg.tree, trees[s], nodes, mask)
+            free_ms.append(int(m_s))
+            free_ls.append(int(l_s))
+        trees, freed, fstats = pool_wavefront_free(
+            pcfg, trees, nodes, shard, ok
+        )
+        rec = {
+            "n_shards": S,
+            "shard_depth": sd,
+            "width": K,
+            "demand_units": int(sizes.sum()),
+            "capacity_units": 1 << SHARD_TOTAL_DEPTH,
+            "rounds": int(stats["rounds"]),
+            "ok": int(ok.sum()),
+            "overflows": int(stats["overflows"]),
+            "merged_writes": int(stats["merged_writes"]),
+            "logical_rmws": int(stats["logical_rmws"]),
+            "free_merged_writes": int(fstats["merged_writes"]),
+            "free_logical_rmws": int(fstats["logical_rmws"]),
+            "free_merged_per_shard": free_ms,
+            "free_logical_per_shard": free_ls,
+            "seconds_per_burst": dt / REPS,
+        }
+        shard_records.append(rec)
+        row(
+            "wavefront_shard_sweep", f"pool-s{S}", K, REPS * K, dt,
+            extra=(
+                f"rounds={rec['rounds']};ok={rec['ok']};"
+                f"overflows={rec['overflows']};"
+                f"merged={rec['merged_writes']};"
+                f"logical={rec['logical_rmws']};"
+                f"free_merged={rec['free_merged_writes']};"
+                f"free_logical={rec['free_logical_rmws']}"
+            ),
+        )
+    by_s = {r["n_shards"]: r for r in shard_records}
+    assert all(r["ok"] == K for r in shard_records), (
+        "the burst must complete on every pool size", shard_records
+    )
+    assert by_s[4]["rounds"] < by_s[1]["rounds"], (
+        "S=4 must complete the saturating burst in fewer rounds than S=1",
+        by_s[4]["rounds"], by_s[1]["rounds"],
+    )
+    dump_bench_json("BENCH_WAVEFRONT_SHARDS.json", shard_records)
 
     # fragmented-tree behaviour: occupancy ~50% at mixed levels
     tree = cfg.empty_tree()

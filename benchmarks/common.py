@@ -10,6 +10,8 @@ rounds.
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Iterable, List
 
@@ -23,6 +25,19 @@ from repro.core.concurrent import TreeConfig, wavefront_alloc, wavefront_free
 from repro.core.ref import NBBSRef
 
 WIDTHS = (1, 2, 4, 8, 16, 32)
+
+
+def dump_bench_json(filename: str, payload) -> str:
+    """Persist a benchmark section's records as a JSON artifact at the
+    repo root (BENCH_*.json — the scaling-trajectory record the docs
+    and later PRs compare against).  Returns the path written."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path
 
 
 def row(name, allocator, width, ops, seconds, extra=""):

@@ -50,3 +50,18 @@ t2, n2, ok2, st2 = wavefront_alloc_pallas(cfg, cfg.empty_tree(), levels)
 assert (np.asarray(t2) == np.asarray(tree)).all()
 assert (np.asarray(n2) == np.asarray(nodes)).all()
 print("kernel output bit-identical to the jnp oracle  [OK]")
+
+print("\n== 5. sharded pool: 4 replicated trees, overflow routing ==")
+from repro.core import PoolConfig, pool_wavefront_alloc, pool_wavefront_free
+
+pcfg = PoolConfig(TreeConfig(depth=8, max_level=0), n_shards=4)
+trees, pnodes, shard, pok, pstats = pool_wavefront_alloc(
+    pcfg, pcfg.empty_trees(), levels - 2, jnp.ones(32, bool)
+)
+per_shard = np.bincount(np.asarray(shard)[np.asarray(pok)], minlength=4)
+print(f"committed {int(pok.sum())}/32 across shards {per_shard.tolist()} "
+      f"in {int(pstats['rounds'])} round(s); "
+      f"{int(pstats['overflows'])} overflowed their home shard")
+trees, freed, _ = pool_wavefront_free(pcfg, trees, pnodes, shard, pok)
+assert (np.asarray(trees) == 0).all()
+print("burst release: one merged pass per shard, all trees empty  [OK]")

@@ -7,6 +7,7 @@ Modules:
   baselines   — spin-lock tree buddy + Linux-style free-list buddy
   concurrent  — batched wavefront allocator (jnp, jittable; kernel oracle)
   nbbs_jax    — single-op in-graph API on top of the wavefront
+  pool        — sharded multi-tree pool (replicated trees + overflow routing)
   bunch       — packed-word multi-level variant (paper §III-D)
 """
 
@@ -24,10 +25,23 @@ from repro.core.concurrent import (  # noqa: F401
 )
 from repro.core.nbbs_jax import (  # noqa: F401
     AllocState,
+    PoolAllocState,
+    init_pool_state,
     init_state,
     nb_alloc,
     nb_free,
     nb_free_batch,
+    nb_pool_alloc,
+    nb_pool_free_batch,
+)
+from repro.core.pool import (  # noqa: F401
+    PoolConfig,
+    home_shard,
+    pool_free_round,
+    pool_wavefront_alloc,
+    pool_wavefront_free,
+    pool_wavefront_step,
+    probe_shard,
 )
 from repro.core.ref import NBBSRef, NBBSStats  # noqa: F401
 from repro.core.baselines import FreeListBuddy, SpinlockTreeBuddy  # noqa: F401

@@ -33,6 +33,14 @@ BUSY = OCC | OCC_LEFT | OCC_RIGHT  # 0x13
 STATUS_MASK = OCC | OCC_LEFT | OCC_RIGHT | COAL_LEFT | COAL_RIGHT  # 0x1F
 STATUS_BITS = 5
 
+# Fibonacci multiplicative hashing constant (2^32 / golden ratio).  The
+# single source of truth for home-shard routing: the device pool
+# (`core/pool.home_shard`) and the host KV manager
+# (`memory/kv_cache.PagedKVManager.home_shard`) both hash requester ids
+# with it, so host and device always agree on "home".  Lives here (and
+# not in core/pool.py) so jax-free host modules can import it.
+FIB_HASH = 2654435761
+
 
 def mod2(child):
     """1 for a right child (odd index), 0 for a left child (even index)."""

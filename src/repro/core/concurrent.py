@@ -46,7 +46,27 @@ Rounds interleave frees-then-allocs, which is one legal linearization.
 
 Everything here is shape-static and jittable; the Pallas kernel
 (`kernels/nbbs_alloc.py`) implements the same per-round algorithm with
-the tree resident in VMEM and this module is its oracle.
+the tree resident in VMEM and this module is its oracle.  `core/pool.py`
+replicates this tree S times and routes lanes across the replicas.
+
+Invariants (deep-linked from docs/architecture.md):
+
+  * node numbering: tree[0] is unused; the root is index 1, the
+    children of node n are 2n and 2n+1, and level(n) = floor(log2 n)
+    (`_level_of`) — every level-sliced pass below indexes the half-open
+    slice [2^lev, 2^(lev+1)) (paper Fig. 2);
+  * occupancy encoding: each word carries the 5-bit mask of
+    `core/bits.py`; a node is allocatable iff its word == 0 AND no
+    strict ancestor has OCC set (`_ancestor_occ` — paper T2 + T11);
+    branch occupancy of a quiescent tree is *derived*: a non-OCC node's
+    OCC_LEFT/OCC_RIGHT equal the OR over the corresponding child
+    sub-tree's reserved nodes, and no COAL bits remain (paper Fig. 6,
+    checked by `NBBSRef.check_invariants`);
+  * double-free arbitration: `free_round` drops any free whose node
+    word lacks OCC (stale/junk handle), and when one batch carries
+    duplicate handles the minimum lane id wins — the same
+    deterministic min-id arbitration the alloc side uses for
+    overlapping tentative assignments.
 """
 
 from __future__ import annotations

@@ -9,7 +9,26 @@ API as K=1 wavefronts rather than duplicating the algorithm.
 `AllocState` carries the paper's two arrays (tree[] and index[]) as JAX
 arrays so allocation/release can live inside a jitted serving step
 (e.g. allocating KV-cache pages for newly admitted sequences without
-host round-trips).
+host round-trips).  `PoolAllocState` is the sharded analogue: S
+replicated (tree[], index[]) pairs stacked on a leading axis, routed by
+`core/pool.py`'s home-shard hash with overflow probing.
+
+Invariants (deep-linked from docs/architecture.md):
+
+  * node numbering: root is index 1, children of n are 2n/2n+1, level
+    of n is floor(log2 n); a level-l node's chunk starts at unit offset
+    (n - 2^l) * 2^(depth-l) (`_node_to_unit_offset`, paper eq. 3);
+  * occupancy encoding: tree[] words carry the 5-bit status mask of
+    `core/bits.py` (OCC = this node reserved, OCC_LEFT/RIGHT = branch
+    occupancy, COAL_* = release in flight); a chunk is allocatable iff
+    its word is exactly 0 and no strict ancestor carries OCC;
+  * index[] maps a unit offset to the node that served it and keeps
+    stale entries after release, exactly like the paper's NBFREE:
+    double-free arbitration happens in `free_round`'s validity mask —
+    a released word without OCC identifies the free as stale and it is
+    dropped instead of corrupting ancestor marks;
+  * pool handles are (shard, unit_offset) pairs; each shard's index[]
+    is private, so a stale handle can never free another shard's node.
 """
 
 from __future__ import annotations
@@ -24,6 +43,11 @@ from repro.core.concurrent import (
     free_round,
     levels_from_sizes,
     wavefront_alloc,
+)
+from repro.core.pool import (
+    PoolConfig,
+    pool_free_round,
+    pool_wavefront_alloc,
 )
 
 Array = jax.Array
@@ -100,3 +124,75 @@ def nb_alloc_size(
     """Size-based convenience (paper NBALLOC API, rule A5 in-graph)."""
     level = levels_from_sizes(cfg, total_memory, jnp.reshape(size, (1,)))[0]
     return nb_alloc(cfg, state, level)
+
+
+# ---------------------------------------------------------------------------
+# Sharded pool API (S replicated trees; routing in core/pool.py)
+# ---------------------------------------------------------------------------
+
+
+class PoolAllocState(NamedTuple):
+    trees: Array  # int32[S, 2^(depth+1)] stacked status-bit trees
+    index: Array  # int32[S, units] per-shard unit offset -> serving node
+
+
+def init_pool_state(pcfg: PoolConfig) -> PoolAllocState:
+    return PoolAllocState(
+        trees=pcfg.empty_trees(),
+        index=jnp.zeros(
+            (pcfg.n_shards, 1 << pcfg.tree.depth), dtype=jnp.int32
+        ),
+    )
+
+
+def nb_pool_alloc(
+    pcfg: PoolConfig,
+    state: PoolAllocState,
+    level: Array,
+    lane_id: Array | int = 0,
+) -> Tuple[PoolAllocState, Array, Array, Array]:
+    """Allocate one chunk at `level` from the pool (in-graph, jit-able).
+
+    `lane_id` is the requester identity fed to the home-shard hash (use
+    e.g. the sequence id so a requester's allocations cluster on its
+    home shard).  Returns (state, shard, unit_offset, ok) — the pool
+    handle is the (shard, unit_offset) pair."""
+    levels = jnp.reshape(level, (1,)).astype(jnp.int32)
+    lane_ids = jnp.reshape(jnp.asarray(lane_id), (1,)).astype(jnp.int32)
+    trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+        pcfg, state.trees, levels, jnp.ones((1,), bool), 64, lane_ids
+    )
+    node, s = nodes[0], shard[0]
+    off = _node_to_unit_offset(pcfg.tree, node)
+    index = jnp.where(
+        ok[0], state.index.at[s, off].set(node), state.index
+    )
+    return PoolAllocState(trees, index), s, off, ok[0]
+
+
+def nb_pool_free_batch(
+    pcfg: PoolConfig,
+    state: PoolAllocState,
+    shards: Array,
+    unit_offsets: Array,
+    active: Array,
+) -> Tuple[PoolAllocState, Array]:
+    """Release a burst of pool handles in one vmapped merged pass (one
+    `free_round` per shard).  Returns (state, freed bool[K]); stale or
+    junk handles are dropped by each shard's validity mask."""
+    shards = shards.astype(jnp.int32)
+    unit_offsets = unit_offsets.astype(jnp.int32)
+    in_range = (
+        (unit_offsets >= 0)
+        & (unit_offsets < (1 << pcfg.tree.depth))
+        & (shards >= 0)
+        & (shards < pcfg.n_shards)
+    )
+    offs = jnp.where(in_range, unit_offsets, 0)
+    sh = jnp.where(in_range, shards, 0)
+    nodes = state.index[sh, offs]
+    trees, _, _, freed = pool_free_round(
+        pcfg, state.trees, nodes, sh, active & in_range
+    )
+    # per-shard index[] keeps stale entries (see module invariants)
+    return PoolAllocState(trees, state.index), freed

@@ -1,0 +1,301 @@
+"""Sharded allocator pool: S replicated wavefront trees behind one API.
+
+The literature scales allocators past a single core structure by
+*replicating* the core allocator and routing requests across the
+replicas (scalloc's backend spans, SpeedMalloc's per-thread pools); the
+paper positions the non-blocking buddy system as exactly such a core
+allocator.  This module is that replication layer for the wavefront
+substrate: a pool of S independent status-bit trees, stacked as the
+leading axis of one `int32[S, n_words]` array so every per-tree pass of
+`core/concurrent.py` lifts to the pool with a single `jax.vmap`.
+
+Routing (all in-graph, shape-static):
+
+  * every requester lane has a deterministic *home shard* — a Fibonacci
+    multiplicative hash of its lane id (`home_shard`), so an unchanged
+    workload always maps to the same shard and the pool state is
+    reproducible run-to-run;
+  * each arbitration round, every pending lane participates in exactly
+    one shard's `alloc_round`; the S per-shard rounds run batched under
+    `vmap` (level slices are static, so XLA sees the same fused vector
+    ops as the single tree, with an extra leading axis);
+  * *overflow*: a lane whose round exhausts its current shard (no free
+    node at its level — the definitive per-tree failure, not a
+    transient arbitration loss) is re-routed to the next shard in the
+    fixed probe order home, home+1, …, home+S-1 (mod S) for the
+    following round.  A lane fails definitively only after exhausting
+    all S shards, so a burst that would fail on one tree succeeds
+    across the pool within at most S-1 extra probe rounds per lane;
+  * releases carry their serving shard (recorded at allocation time):
+    `pool_free_round` applies one merged `free_round` per shard — a
+    whole multi-shard burst costs one vmapped O(depth) sweep.
+
+Invariants (deep-linked from docs/architecture.md):
+
+  * shard trees are fully independent — no tree word is shared, so the
+    single-tree safety theorems (S1/S2) apply per shard and a
+    cross-shard double allocation is structurally impossible: a lane is
+    pending on exactly one shard per round (`shard[k]` is scalar);
+  * with `n_shards == 1` every pool entry point is bit-identical to its
+    single-tree counterpart (the vmap over one shard is the identity
+    and the probe order is the single tree) — enforced by differential
+    tests in tests/test_pool.py;
+  * node numbering inside a shard is unchanged (root = 1, children
+    2n/2n+1); a pool handle is the pair (shard, node) and unit offsets
+    are per-shard, exactly like a replicated allocator's (arena, addr).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.bits import FIB_HASH
+from repro.core.concurrent import TreeConfig, alloc_round, free_round
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Static geometry of the sharded pool: S replicas of one tree."""
+
+    tree: TreeConfig
+    n_shards: int = 1
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+
+    @property
+    def n_words(self) -> int:
+        return self.tree.n_words
+
+    @property
+    def total_units(self) -> int:
+        return self.n_shards << self.tree.depth
+
+    def empty_trees(self) -> Array:
+        return jnp.zeros((self.n_shards, self.n_words), dtype=jnp.int32)
+
+
+def home_shard(pcfg: PoolConfig, lane_ids: Array) -> Array:
+    """Deterministic home shard of each requester lane (Fibonacci hash)."""
+    h = lane_ids.astype(jnp.uint32) * jnp.uint32(FIB_HASH)
+    return (h % jnp.uint32(pcfg.n_shards)).astype(jnp.int32)
+
+
+def probe_shard(pcfg: PoolConfig, home: Array, attempt: Array) -> Array:
+    """Shard probed on the given overflow attempt (fixed cyclic order)."""
+    return (home + attempt) % pcfg.n_shards
+
+
+# ---------------------------------------------------------------------------
+# Pool rounds: one vmapped per-shard pass + overflow re-routing
+# ---------------------------------------------------------------------------
+
+
+def pool_alloc_round(
+    pcfg: PoolConfig,
+    trees: Array,
+    levels: Array,
+    pending: Array,
+    shard: Array,
+    attempt: Array,
+    nodes: Array,
+):
+    """One pool arbitration round.
+
+    Runs `alloc_round` on every shard (vmapped; each lane participates
+    in the shard it is currently routed to), then re-routes lanes whose
+    shard is exhausted at their level to the next shard in the probe
+    order.  Lanes that merely lost arbitration stay on their shard and
+    retry, exactly like the single tree.
+
+    Returns (trees, nodes, pending, shard, attempt, merged, logical, won).
+    """
+    S = pcfg.n_shards
+    K = levels.shape[0]
+    sh_ids = jnp.arange(S, dtype=jnp.int32)
+    lane_mask = shard[None, :] == sh_ids[:, None]        # [S, K]
+    sh_pending = pending[None, :] & lane_mask
+
+    rnd = jax.vmap(
+        functools.partial(alloc_round, pcfg.tree),
+        in_axes=(0, None, 0, None),
+    )
+    trees, nodes_s, pending_s, merged_s, logical_s, won_s = rnd(
+        trees, levels, sh_pending, jnp.zeros((K,), jnp.int32)
+    )
+
+    won = won_s.any(axis=0)          # a lane is pending on exactly one shard
+    won_node = (nodes_s * won_s).sum(axis=0)
+    nodes = jnp.where(won, won_node, nodes)
+    # a lane still pending after its shard's round lost arbitration;
+    # pending lanes that vanished without winning exhausted the shard
+    pend_after = pending_s.any(axis=0)
+    exhausted = pending & ~won & ~pend_after
+
+    attempt = attempt + exhausted.astype(jnp.int32)
+    give_up = exhausted & (attempt >= S)   # probed every shard: fail
+    shard = jnp.where(exhausted & ~give_up, (shard + 1) % S, shard)
+    pending = pending & ~won & ~give_up
+    return (
+        trees,
+        nodes,
+        pending,
+        shard,
+        attempt,
+        merged_s.sum(dtype=jnp.int32),
+        logical_s.sum(dtype=jnp.int32),
+        won,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def pool_wavefront_alloc(
+    pcfg: PoolConfig,
+    trees: Array,
+    levels: Array,
+    active: Array,
+    max_rounds: int = 64,
+    lane_ids: Array | None = None,
+) -> Tuple[Array, Array, Array, Array, dict]:
+    """Allocate a wavefront of requests across the pool.
+
+    Args:
+      pcfg: static pool geometry.
+      trees: int32[S, n_words] stacked status-bit trees.
+      levels: int32[K] target level per request (per-shard-tree levels).
+      active: bool[K] request-present mask.
+      max_rounds: static bound on pool rounds (progress: every round each
+        contended shard commits or exhausts >= 1 lane, and a lane probes
+        at most S shards, so K + S rounds always suffice).
+      lane_ids: int32[K] requester identities for home-shard hashing
+        (defaults to arange(K)).
+
+    Returns:
+      (trees, nodes, shard, ok, stats) — nodes int32[K] (0 where
+      failed/inactive), shard int32[K] the serving shard of each lane
+      (its handle is the pair), ok bool[K]; stats adds 'overflows' (lanes
+      served off their home shard) to the single-tree counters.
+    """
+    K = levels.shape[0]
+    if lane_ids is None:
+        lane_ids = jnp.arange(K, dtype=jnp.int32)
+    home = home_shard(pcfg, lane_ids)
+
+    def round_body(carry):
+        trees, nodes, pending, shard, attempt, rounds, merged, logical = carry
+        trees, nodes, pending, shard, attempt, m, l, _ = pool_alloc_round(
+            pcfg, trees, levels, pending, shard, attempt, nodes
+        )
+        return (
+            trees, nodes, pending, shard, attempt,
+            rounds + 1, merged + m, logical + l,
+        )
+
+    def cond(carry):
+        _, _, pending, _, _, rounds, _, _ = carry
+        return pending.any() & (rounds < max_rounds)
+
+    init = (
+        trees,
+        jnp.zeros(K, dtype=jnp.int32),
+        active,
+        home,
+        jnp.zeros(K, dtype=jnp.int32),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    trees, nodes, _, shard, _, rounds, merged, logical = lax.while_loop(
+        cond, round_body, init
+    )
+    ok = nodes > 0
+    stats = {
+        "rounds": rounds,
+        "merged_writes": merged,
+        "logical_rmws": logical,
+        "overflows": (ok & (shard != home)).sum(dtype=jnp.int32),
+    }
+    return trees, nodes, shard, ok, stats
+
+
+def pool_free_round(
+    pcfg: PoolConfig,
+    trees: Array,
+    nodes: Array,
+    shard: Array,
+    active: Array,
+) -> Tuple[Array, Array, Array, Array]:
+    """Release a multi-shard burst: one merged `free_round` per shard,
+    all S applied in a single vmapped O(depth) sweep.  Each lane's node
+    is released on the shard recorded in its handle; double frees and
+    junk handles are dropped per shard exactly like the single tree.
+
+    Returns (trees, merged_writes, logical_rmws, freed)."""
+    S = pcfg.n_shards
+    sh_ids = jnp.arange(S, dtype=jnp.int32)
+    sh_active = active[None, :] & (shard[None, :] == sh_ids[:, None])
+    rnd = jax.vmap(
+        functools.partial(free_round, pcfg.tree), in_axes=(0, None, 0)
+    )
+    trees, merged_s, logical_s, freed_s = rnd(trees, nodes, sh_active)
+    return (
+        trees,
+        merged_s.sum(dtype=jnp.int32),
+        logical_s.sum(dtype=jnp.int32),
+        freed_s.any(axis=0),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def pool_wavefront_free(
+    pcfg: PoolConfig,
+    trees: Array,
+    nodes: Array,
+    shard: Array,
+    active: Array,
+) -> Tuple[Array, Array, dict]:
+    """Jitted pool release. Returns (trees, freed, stats)."""
+    trees, merged, logical, freed = pool_free_round(
+        pcfg, trees, nodes, shard, active
+    )
+    return trees, freed, {"merged_writes": merged, "logical_rmws": logical}
+
+
+@functools.partial(jax.jit, static_argnums=(0, 7))
+def pool_wavefront_step(
+    pcfg: PoolConfig,
+    trees: Array,
+    free_nodes: Array,
+    free_shard: Array,
+    free_active: Array,
+    alloc_levels: Array,
+    alloc_active: Array,
+    max_rounds: int = 64,
+    lane_ids: Array | None = None,
+):
+    """One pool scheduler round: the per-shard merged release pass
+    first, then the pool allocation wavefront with overflow probing
+    (one legal linearization of a mixed multi-shard batch).
+
+    Returns (trees, nodes, shard, ok, stats)."""
+    trees, free_merged, free_logical, freed = pool_free_round(
+        pcfg, trees, free_nodes, free_shard, free_active
+    )
+    trees, nodes, shard, ok, stats = pool_wavefront_alloc(
+        pcfg, trees, alloc_levels, alloc_active, max_rounds, lane_ids
+    )
+    stats = dict(stats)
+    stats["free_writes"] = free_merged
+    stats["free_merged_writes"] = free_merged
+    stats["free_logical_rmws"] = free_logical
+    stats["freed"] = freed.sum(dtype=jnp.int32)
+    return trees, nodes, shard, ok, stats

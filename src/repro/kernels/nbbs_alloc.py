@@ -24,6 +24,19 @@ sweep — no retry rounds, since meeting-point conflicts are resolved by
 the bottom-up sub-tree-occupancy OR — before the allocation rounds run,
 all while the tree stays VMEM-resident.
 
+The pooled entry point (`pool_wavefront_step_pallas`) extends this to
+the sharded pool of `core/pool.py`: the grid iterates over shards, each
+program pulls exactly one shard's tree into VMEM (BlockSpec row slice of
+the stacked [S, n_words] array) and runs the full mixed step for the
+lanes routed to that shard (shard-membership masks computed in-kernel
+from `pl.program_id`).  Overflow probing happens *between* kernel
+launches (the `ops.nbbs_pool_wavefront_step` driver re-routes failed
+lanes to the next shard in the pool's fixed probe order), so each
+launch keeps the single-shard VMEM residency property; the in-graph
+lockstep router of `core/pool.py` is the oracle whenever no overflow
+occurs, and the attempt-granular linearization here is one of the pool's
+legal linearizations otherwise.
+
 Grid: a single program; rounds run as a bounded fori_loop inside the
 kernel (conflict losers retry exactly like failed CAS).  BlockSpecs map
 the full tree / request vectors into VMEM — the deliberate tiling
@@ -51,6 +64,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core.concurrent import TreeConfig, alloc_round, free_round
+from repro.core.pool import PoolConfig
 
 Array = jax.Array
 
@@ -206,6 +220,135 @@ def wavefront_step_pallas(
         active,
     )
     return tree_out, nodes, nodes > 0, stats
+
+
+def _pool_step_kernel(
+    pcfg: PoolConfig,
+    max_rounds: int,
+    trees_ref,
+    free_nodes_ref,
+    free_shard_ref,
+    free_active_ref,
+    levels_ref,
+    alloc_shard_ref,
+    active_ref,
+    trees_out_ref,
+    nodes_ref,
+    stats_ref,
+):
+    """One shard's mixed step (grid axis 0 = shard).  The program sees
+    only its own tree (VMEM row slice) plus the full lane vectors, and
+    masks lanes by shard membership — the Pallas analogue of the
+    vmapped per-shard round in `core/pool.py`."""
+    s = pl.program_id(0)
+    cfg = pcfg.tree
+    tree = trees_ref[0]
+    fmask = (free_active_ref[...] != 0) & (free_shard_ref[...] == s)
+    tree, free_merged, free_logical, freed = free_round(
+        cfg, tree, free_nodes_ref[...], fmask
+    )
+    n_freed = freed.sum(dtype=jnp.int32)
+
+    levels = levels_ref[...]
+    pending = (active_ref[...] != 0) & (alloc_shard_ref[...] == s)
+    K = levels.shape[0]
+    nodes = jnp.zeros((K,), dtype=jnp.int32)
+
+    def body(_, carry):
+        tree, nodes, pending, rounds, merged, logical = carry
+        live = pending.any()
+
+        def run(args):
+            tree, nodes, pending, rounds, merged, logical = args
+            tree, nodes, pending, m, l, _ = alloc_round(
+                cfg, tree, levels, pending, nodes
+            )
+            return tree, nodes, pending, rounds + 1, merged + m, logical + l
+
+        return lax.cond(
+            live, run, lambda a: a, (tree, nodes, pending, rounds, merged, logical)
+        )
+
+    tree, nodes, pending, rounds, merged, logical = lax.fori_loop(
+        0,
+        max_rounds,
+        body,
+        (tree, nodes, pending, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+    )
+    trees_out_ref[0] = tree
+    nodes_ref[0] = nodes
+    stats_ref[0] = jnp.stack(
+        [rounds, merged, logical, free_merged, free_logical, n_freed]
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pcfg", "max_rounds", "interpret")
+)
+def pool_wavefront_step_pallas(
+    pcfg: PoolConfig,
+    trees: Array,
+    free_nodes: Array,
+    free_shard: Array,
+    free_active: Array,
+    levels: Array,
+    alloc_shard: Array,
+    max_rounds: int = 64,
+    *,
+    active: Array | None = None,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array, Array]:
+    """Pooled mixed alloc+free Pallas entry point (grid over shards).
+
+    Each lane allocates on `alloc_shard[k]` and each free lands on
+    `free_shard[f]`; overflow re-routing across launches is the caller's
+    job (`ops.nbbs_pool_wavefront_step`).  Returns (trees, nodes, ok,
+    stats[S, 6]) with per-shard stats rows = [alloc_rounds,
+    alloc_merged, alloc_logical, free_merged, free_logical, freed].
+    """
+    if active is None:
+        active = jnp.ones(levels.shape, dtype=jnp.int32)
+    else:
+        active = active.astype(jnp.int32)
+    S = pcfg.n_shards
+    K = levels.shape[0]
+    F = free_nodes.shape[0]
+    kernel = functools.partial(_pool_step_kernel, pcfg, max_rounds)
+    trees_out, nodes_s, stats = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((S, pcfg.n_words), jnp.int32),
+            jax.ShapeDtypeStruct((S, K), jnp.int32),
+            jax.ShapeDtypeStruct((S, 6), jnp.int32),
+        ],
+        in_specs=[
+            pl.BlockSpec((1, pcfg.n_words), lambda s: (s, 0)),  # own shard tree
+            pl.BlockSpec((F,), lambda s: (0,)),
+            pl.BlockSpec((F,), lambda s: (0,)),
+            pl.BlockSpec((F,), lambda s: (0,)),
+            pl.BlockSpec((K,), lambda s: (0,)),
+            pl.BlockSpec((K,), lambda s: (0,)),
+            pl.BlockSpec((K,), lambda s: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, pcfg.n_words), lambda s: (s, 0)),
+            pl.BlockSpec((1, K), lambda s: (s, 0)),
+            pl.BlockSpec((1, 6), lambda s: (s, 0)),
+        ],
+        grid=(S,),
+        interpret=interpret,
+    )(
+        trees,
+        free_nodes.astype(jnp.int32),
+        free_shard.astype(jnp.int32),
+        free_active.astype(jnp.int32),
+        levels.astype(jnp.int32),
+        alloc_shard.astype(jnp.int32),
+        active,
+    )
+    # a lane is routed to exactly one shard, so at most one row is non-zero
+    nodes = nodes_s.max(axis=0)
+    return trees_out, nodes, nodes > 0, stats
 
 
 @functools.partial(

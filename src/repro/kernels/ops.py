@@ -23,9 +23,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.concurrent import TreeConfig, wavefront_step
+from repro.core.pool import PoolConfig, home_shard, pool_wavefront_step
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.nbbs_alloc import wavefront_alloc_pallas, wavefront_step_pallas
+from repro.kernels.nbbs_alloc import (
+    pool_wavefront_step_pallas,
+    wavefront_alloc_pallas,
+    wavefront_step_pallas,
+)
 from repro.kernels.paged_attention import paged_attention as paged_attention_pallas
 
 Array = jax.Array
@@ -217,3 +222,91 @@ def nbbs_wavefront_step(
         "free_logical_rmws": stats[4],
         "freed": stats[5],
     }
+
+
+def nbbs_pool_wavefront_step(
+    pcfg: PoolConfig,
+    trees: Array,
+    free_nodes: Array,
+    free_shard: Array,
+    free_active: Array,
+    levels: Array,
+    *,
+    lane_ids: Array | None = None,
+    active: Array | None = None,
+    max_rounds: int = 64,
+    impl: str = "auto",
+):
+    """Pooled mixed release+allocation step across S sharded trees.
+
+    "reference" runs the in-graph lockstep router (`pool_wavefront_step`
+    — lanes re-route between pool rounds).  The Pallas paths launch the
+    grid-over-shards kernel once per probe attempt: every launch keeps
+    one shard's tree VMEM-resident per program, and lanes whose shard is
+    exhausted are re-routed to the next shard in the pool's fixed probe
+    order before the next launch (an attempt-granular linearization of
+    the same routing; identical to the reference whenever no lane
+    overflows).  Returns (trees, nodes, shard, ok, stats).
+    """
+    impl = _resolve(impl)
+    K = levels.shape[0]
+    if active is None:
+        active = jnp.ones(levels.shape, dtype=bool)
+    if lane_ids is None:
+        lane_ids = jnp.arange(K, dtype=jnp.int32)
+    if impl == "reference":
+        return pool_wavefront_step(
+            pcfg, trees, free_nodes, free_shard, free_active, levels,
+            active, max_rounds, lane_ids,
+        )
+    S = pcfg.n_shards
+    home = home_shard(pcfg, lane_ids)
+    shard = home
+    pending = active
+    nodes = jnp.zeros(K, dtype=jnp.int32)
+    out_shard = shard
+    fa = free_active
+    agg = {
+        "rounds": jnp.int32(0),
+        "merged_writes": jnp.int32(0),
+        "logical_rmws": jnp.int32(0),
+        "free_writes": jnp.int32(0),
+        "free_logical_rmws": jnp.int32(0),
+        "freed": jnp.int32(0),
+    }
+    for _ in range(S):
+        trees, n_a, ok_a, st = pool_wavefront_step_pallas(
+            pcfg,
+            trees,
+            free_nodes,
+            free_shard,
+            fa,
+            levels,
+            shard,
+            max_rounds,
+            active=pending,
+            interpret=(impl == "interpret"),
+        )
+        won = pending & ok_a
+        nodes = jnp.where(won, n_a, nodes)
+        out_shard = jnp.where(won, shard, out_shard)
+        pending = pending & ~ok_a
+        shard = jnp.where(pending, (shard + 1) % S, shard)
+        # shards run concurrently within a launch: rounds is the max row
+        agg["rounds"] = agg["rounds"] + st[:, 0].max()
+        agg["merged_writes"] = agg["merged_writes"] + st[:, 1].sum()
+        agg["logical_rmws"] = agg["logical_rmws"] + st[:, 2].sum()
+        agg["free_writes"] = agg["free_writes"] + st[:, 3].sum()
+        agg["free_logical_rmws"] = agg["free_logical_rmws"] + st[:, 4].sum()
+        agg["freed"] = agg["freed"] + st[:, 5].sum()
+        fa = jnp.zeros_like(free_active)  # frees apply on the first launch
+        # early exit is an eager-mode optimization only: under jit
+        # `pending` is a tracer and the loop simply runs all S launches
+        if not isinstance(pending, jax.core.Tracer) and not bool(
+            pending.any()
+        ):
+            break
+    ok = nodes > 0
+    agg["free_merged_writes"] = agg["free_writes"]
+    agg["overflows"] = (ok & (out_shard != home)).sum(dtype=jnp.int32)
+    return trees, nodes, out_shard, ok, agg

@@ -16,7 +16,32 @@ Design points (DESIGN.md §2):
     (fragmentation is visible in O(1) through the status-bit tree);
   * frees coalesce automatically (paper §III-C), so long-lived serving
     does not degrade — the property the Constant Occupancy benchmark
-    measures.
+    measures;
+  * with `n_shards > 1` the page pool is split across S replicated
+    buddy trees (the host mirror of `core/pool.py`): a sequence's home
+    shard is the Fibonacci hash of its id, admission probes shards in
+    the fixed cyclic order home, home+1, …, and the serving shard is
+    recorded in `SeqAlloc.shard` so a burst release frees per-shard —
+    one `free_round`-equivalent burst per shard, never a cross-shard
+    scan.
+
+Invariants (deep-linked from docs/architecture.md):
+
+  * page-id numbering: shard s owns the global page ids
+    [s * pages_per_shard, (s+1) * pages_per_shard); each shard's
+    `NBBSRef` is constructed with that `base_address`, so every address
+    it returns is already a global page id and block tables are
+    shard-agnostic;
+  * a sequence's runs all live on its recorded shard (`SeqAlloc.shard`)
+    — admission probes whole-sequence, growth never migrates — so
+    `free_sequence(s)` is exactly one per-shard burst;
+  * occupancy encoding inside each shard is the 5-bit status-bit tree
+    of `core/bits.py`; occupancy/fragmentation introspection
+    (`fragmentation`) is the per-shard O(tree) scan, reported per shard
+    and pool-wide;
+  * double frees cannot cross shards: a handle resolves through its own
+    shard's index[] only (see `core/nbbs_jax.py` invariants for the
+    arbitration rule on the device path).
 """
 
 from __future__ import annotations
@@ -26,14 +51,16 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.bits import FIB_HASH  # host/device routing must agree
 from repro.core.ref import NBBSRef
 
 
 @dataclasses.dataclass
 class SeqAlloc:
     seq_id: int
-    runs: List[range]          # page-id ranges, in order
+    runs: List[range]          # page-id ranges (global ids), in order
     n_tokens: int = 0
+    shard: int = 0             # serving shard: all runs live here
 
     @property
     def n_pages(self) -> int:
@@ -49,88 +76,152 @@ class PagedKVManager:
         page_tokens: int,
         max_run_pages: Optional[int] = None,
         scattered: bool = True,
+        n_shards: int = 1,
     ) -> None:
         if num_pages & (num_pages - 1):
             raise ValueError("num_pages must be a power of two")
+        if n_shards < 1 or (n_shards & (n_shards - 1)):
+            raise ValueError("n_shards must be a power of two >= 1")
+        if num_pages % n_shards:
+            raise ValueError("num_pages must divide evenly across shards")
         self.num_pages = num_pages
         self.page_tokens = page_tokens
-        self.max_run_pages = max_run_pages or num_pages
+        self.n_shards = n_shards
+        self.pages_per_shard = num_pages // n_shards
+        self.max_run_pages = min(
+            max_run_pages or num_pages, self.pages_per_shard
+        )
         self.scattered = scattered
-        # One allocation unit == one page.
-        self.buddy = NBBSRef(num_pages, 1, max_size=self.max_run_pages)
+        # One allocation unit == one page; shard s serves global ids
+        # [s * pages_per_shard, (s+1) * pages_per_shard) via base_address.
+        self.buddies = [
+            NBBSRef(
+                self.pages_per_shard,
+                1,
+                max_size=self.max_run_pages,
+                base_address=s * self.pages_per_shard,
+            )
+            for s in range(n_shards)
+        ]
         self.seqs: Dict[int, SeqAlloc] = {}
 
+    @property
+    def buddy(self) -> NBBSRef:
+        """The single tree of an unsharded pool (back-compat accessor)."""
+        assert self.n_shards == 1, "sharded pool: use .buddies[s]"
+        return self.buddies[0]
+
     # ------------------------------------------------------------------
+    def home_shard(self, seq_id: int) -> int:
+        """Deterministic home shard of a sequence (Fibonacci hash, the
+        same spread as `core/pool.home_shard` for device lanes)."""
+        return ((seq_id * FIB_HASH) & 0xFFFFFFFF) % self.n_shards
+
     def pages_for_tokens(self, n_tokens: int) -> int:
         return max(1, -(-n_tokens // self.page_tokens))
 
     def _next_pow2(self, n: int) -> int:
         return 1 << (n - 1).bit_length()
 
-    def add_sequence(self, seq_id: int, n_tokens: int) -> bool:
-        """Admit a sequence with a prompt of n_tokens. False = pool full
-        (the scheduler should queue/evict — admission control)."""
-        assert seq_id not in self.seqs
-        need = self._next_pow2(self.pages_for_tokens(max(n_tokens, 1)))
+    def _try_admit_on(self, shard: int, need: int) -> Optional[List[range]]:
+        """Allocate `need` pages worth of runs on one shard, or roll back
+        and return None (an admission is all-on-one-shard or nothing)."""
+        buddy = self.buddies[shard]
         runs: List[range] = []
         remaining = need
         while remaining:
             run = min(remaining, self.max_run_pages)
-            addr = self.buddy.nb_alloc(run, scattered=self.scattered)
+            addr = buddy.nb_alloc(run, scattered=self.scattered)
             if addr is None:
                 for r in runs:  # roll back partial admission
-                    self.buddy.nb_free(r.start)
-                return False
+                    buddy.nb_free(r.start)
+                return None
             runs.append(range(addr, addr + run))
             remaining -= run
-        self.seqs[seq_id] = SeqAlloc(seq_id, runs, n_tokens)
-        return True
+        return runs
+
+    def add_sequence(self, seq_id: int, n_tokens: int) -> bool:
+        """Admit a sequence with a prompt of n_tokens. False = pool full
+        (the scheduler should queue/evict — admission control).
+
+        Probes shards in the fixed order home, home+1, …, home+S-1: the
+        first shard that can hold the whole sequence serves it (overflow
+        routing, mirroring `core/pool.py`)."""
+        assert seq_id not in self.seqs
+        need = self._next_pow2(self.pages_for_tokens(max(n_tokens, 1)))
+        if need > self.pages_per_shard:
+            # Not "pool full" — the request exceeds the pool geometry
+            # and no amount of waiting or probing can ever admit it.
+            # Raising (instead of returning False) keeps an impossible
+            # request from head-of-line blocking the scheduler forever.
+            raise ValueError(
+                f"sequence needs {need} pages but a shard holds only "
+                f"{self.pages_per_shard} (num_pages={self.num_pages}, "
+                f"n_shards={self.n_shards})"
+            )
+        home = self.home_shard(seq_id)
+        for attempt in range(self.n_shards):
+            shard = (home + attempt) % self.n_shards
+            runs = self._try_admit_on(shard, need)
+            if runs is not None:
+                self.seqs[seq_id] = SeqAlloc(
+                    seq_id, runs, n_tokens, shard=shard
+                )
+                return True
+        return False
 
     def append_tokens(self, seq_id: int, n_new: int = 1) -> bool:
-        """Reserve space for n_new more tokens; grows by buddy doubling.
+        """Reserve space for n_new more tokens; grows by buddy doubling
+        on the sequence's recorded shard (runs never migrate shards).
         On failure the sequence is left exactly as before the call: both
         n_tokens and any runs grown by earlier loop iterations are rolled
         back (a partially grown sequence would silently leak pages the
         token count never accounts for)."""
         s = self.seqs[seq_id]
+        buddy = self.buddies[s.shard]
         n_runs_before = len(s.runs)
         s.n_tokens += n_new
         while self.pages_for_tokens(s.n_tokens) > s.n_pages:
             grow = min(self._next_pow2(max(s.n_pages, 1)), self.max_run_pages)
-            addr = self.buddy.nb_alloc(grow, scattered=self.scattered)
+            addr = buddy.nb_alloc(grow, scattered=self.scattered)
             if addr is None:
                 s.n_tokens -= n_new
                 grown = s.runs[n_runs_before:]
                 del s.runs[n_runs_before:]
-                self.buddy.nb_free_many(r.start for r in grown)
+                buddy.nb_free_many(r.start for r in grown)
                 return False
             s.runs.append(range(addr, addr + grow))
         return True
 
     def free_sequence(self, seq_id: int) -> None:
         """Release a sequence: all of its runs go back in one burst call
-        (one merged release pass on wavefront-backed pools)."""
+        on its shard (one merged release pass on wavefront-backed pools)."""
         s = self.seqs.pop(seq_id)
-        self.buddy.nb_free_many(r.start for r in s.runs)
+        self.buddies[s.shard].nb_free_many(r.start for r in s.runs)
 
     def free_sequences(self, seq_ids: List[int]) -> None:
-        """Batch eviction: release every run of every sequence in a
-        single burst.  Validates the whole batch before mutating any
-        state so an unknown id cannot strand already-popped sequences'
-        pages."""
+        """Batch eviction: release every run of every sequence, grouped
+        by shard so each shard gets a single burst (one `free_round`
+        each on wavefront-backed pools).  Validates the whole batch
+        before mutating any state so an unknown id cannot strand
+        already-popped sequences' pages."""
         unique = list(dict.fromkeys(seq_ids))
         missing = [i for i in unique if i not in self.seqs]
         if missing:
             raise KeyError(missing[0])
-        addrs = []
+        per_shard: Dict[int, List[int]] = {}
         for seq_id in unique:
             s = self.seqs.pop(seq_id)
-            addrs.extend(r.start for r in s.runs)
-        self.buddy.nb_free_many(addrs)
+            per_shard.setdefault(s.shard, []).extend(
+                r.start for r in s.runs
+            )
+        for shard, addrs in per_shard.items():
+            self.buddies[shard].nb_free_many(addrs)
 
     # ------------------------------------------------------------------
     def block_table(self, seq_id: int, max_pages: int) -> np.ndarray:
-        """Flat page-id table, -1 padded, for the paged-attention kernel."""
+        """Flat page-id table, -1 padded, for the paged-attention kernel.
+        Ids are global (shard base already folded in by `base_address`)."""
         s = self.seqs[seq_id]
         ids = [p for r in s.runs for p in r]
         used = self.pages_for_tokens(s.n_tokens)
@@ -144,46 +235,51 @@ class PagedKVManager:
 
     # ------------------------------------------------------------------
     def free_pages(self) -> int:
-        return self.buddy.free_bytes()  # unit == page
+        return sum(b.free_bytes() for b in self.buddies)  # unit == page
 
-    def fragmentation(self) -> dict:
-        """Occupancy + largest allocatable run (O(tree) introspection)."""
-        free = self.free_pages()
-        largest = 0
+    def _largest_run_on(self, buddy: NBBSRef) -> int:
+        from repro.core.bits import is_free
+
         probe = self.max_run_pages
         while probe >= 1:
             # non-destructive probe: scan the level for a free node
-            level = self.buddy.level_for_size(probe)
+            level = buddy.level_for_size(probe)
             base = 1 << level
-            from repro.core.bits import is_free
-
-            anc_free = any(
-                is_free(self.buddy.tree[i])
-                and not self._occupied_ancestor(i)
+            if any(
+                is_free(buddy.tree[i])
+                and not self._occupied_ancestor(buddy, i)
                 for i in range(base, 2 * base)
-            )
-            if anc_free:
-                largest = probe
-                break
+            ):
+                return probe
             probe //= 2
+        return 0
+
+    def fragmentation(self) -> dict:
+        """Occupancy + largest allocatable run (O(tree) introspection),
+        pool-wide plus the per-shard breakdown."""
+        free = self.free_pages()
+        per_shard_largest = [self._largest_run_on(b) for b in self.buddies]
+        per_shard_free = [b.free_bytes() for b in self.buddies]
         return {
             "free_pages": free,
             "used_pages": self.num_pages - free,
-            "largest_run": largest,
+            "largest_run": max(per_shard_largest),
             "n_seqs": len(self.seqs),
             "runs_per_seq": (
                 float(np.mean([len(s.runs) for s in self.seqs.values()]))
                 if self.seqs
                 else 0.0
             ),
+            "per_shard_free": per_shard_free,
+            "per_shard_largest_run": per_shard_largest,
         }
 
-    def _occupied_ancestor(self, n: int) -> bool:
+    def _occupied_ancestor(self, buddy: NBBSRef, n: int) -> bool:
         from repro.core.bits import OCC
 
         n >>= 1
         while n >= 1:
-            if self.buddy.tree[n] & OCC:
+            if buddy.tree[n] & OCC:
                 return True
             n >>= 1
         return False

@@ -50,6 +50,7 @@ class ServeEngine:
         eos_token: Optional[int] = None,
         dtype=jnp.float32,
         impl: str = "auto",
+        n_shards: int = 1,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
             "paged engine covers attention families; SSM/hybrid use "
@@ -62,14 +63,18 @@ class ServeEngine:
         self.eos = eos_token
         self.dtype = dtype
         self.impl = impl
-        self.kv = PagedKVManager(num_pages, page_tokens)
+        # n_shards > 1 splits the page pool across replicated buddy
+        # trees (home-shard hashing + overflow probing; one release
+        # burst per shard when sequences retire — see memory/kv_cache).
+        self.kv = PagedKVManager(num_pages, page_tokens, n_shards=n_shards)
         self.pool = init_pool(cfg, num_pages, page_tokens, dtype)
         self.max_pages = num_pages
         self.running: Dict[int, Request] = {}
         self.ctx_lens: Dict[int, int] = {}
         self.waiting: List[Request] = []
         self.completed: Dict[int, Request] = {}
-        self.stats = {"admitted": 0, "queued_full": 0, "steps": 0}
+        self.stats = {"admitted": 0, "queued_full": 0, "rejected": 0,
+                      "steps": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -80,7 +85,18 @@ class ServeEngine:
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
             need_tokens = len(req.prompt) + req.max_new_tokens
-            if not self.kv.add_sequence(req.req_id, need_tokens):
+            try:
+                admitted_ok = self.kv.add_sequence(req.req_id, need_tokens)
+            except ValueError:
+                # request exceeds the pool geometry (can never be
+                # admitted): reject it instead of letting it head-of-line
+                # block the queue forever
+                self.waiting.pop(0)
+                req.done = True
+                self.completed[req.req_id] = req
+                self.stats["rejected"] += 1
+                continue
+            if not admitted_ok:
                 self.stats["queued_full"] += 1
                 break  # pool full: natural admission control
             self.waiting.pop(0)

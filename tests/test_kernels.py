@@ -7,10 +7,12 @@ import numpy as np
 import pytest
 
 from repro.core.concurrent import TreeConfig, wavefront_alloc, wavefront_step
+from repro.core.pool import PoolConfig
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.nbbs_alloc import wavefront_alloc_pallas, wavefront_step_pallas
 from repro.kernels.ops import (
     flash_attention,
+    nbbs_pool_wavefront_step,
     nbbs_wavefront_alloc,
     nbbs_wavefront_step,
     paged_attention,
@@ -216,3 +218,78 @@ class TestNBBSKernel:
         assert (np.asarray(t1) == np.asarray(t2)).all()
         assert (np.asarray(n1) == np.asarray(n2)).all()
         assert int(s1["free_merged_writes"]) == int(s2["free_merged_writes"])
+
+
+class TestPooledNBBSKernel:
+    """Grid-over-shards pooled kernel vs the in-graph pool router."""
+
+    def test_s1_bit_identical_to_single_tree_kernel(self):
+        cfg = TreeConfig(depth=6, max_level=0)
+        pcfg = PoolConfig(cfg, 1)
+        rng = np.random.default_rng(4)
+        tree, nodes, ok, _ = wavefront_alloc(
+            cfg, cfg.empty_tree(),
+            jnp.asarray(rng.integers(2, 7, size=16), jnp.int32),
+            jnp.ones(16, bool),
+        )
+        fn, fa = nodes[:8], ok[:8]
+        levels = jnp.asarray(rng.integers(1, 7, size=12), jnp.int32)
+        t1, n1, ok1, _ = wavefront_step_pallas(cfg, tree, fn, fa, levels)
+        t2, n2, sh2, ok2, _ = nbbs_pool_wavefront_step(
+            pcfg, tree[None, :], fn, jnp.zeros(8, jnp.int32), fa, levels,
+            impl="interpret",
+        )
+        assert (np.asarray(t1) == np.asarray(t2[0])).all()
+        assert (np.asarray(n1) == np.asarray(n2)).all()
+        assert not np.asarray(sh2).any()
+
+    @pytest.mark.parametrize("S,depth,K,seed", [(2, 6, 16, 0), (4, 5, 20, 1)])
+    def test_no_overflow_matches_reference_pool(self, S, depth, K, seed):
+        """Without overflow the attempt-granular kernel linearization is
+        the same linearization as the lockstep in-graph router, so the
+        results must be bit-identical."""
+        pcfg = PoolConfig(TreeConfig(depth=depth), S)
+        rng = np.random.default_rng(seed)
+        # ample capacity: mid-to-leaf levels, no shard can exhaust
+        levels = jnp.asarray(
+            rng.integers(depth - 2, depth + 1, size=K), jnp.int32
+        )
+        fz = jnp.zeros(4, jnp.int32)
+        fza = jnp.zeros(4, bool)
+        r = nbbs_pool_wavefront_step(
+            pcfg, pcfg.empty_trees(), fz, fz, fza, levels, impl="reference"
+        )
+        p = nbbs_pool_wavefront_step(
+            pcfg, pcfg.empty_trees(), fz, fz, fza, levels, impl="interpret"
+        )
+        for a, b in zip(r[:4], p[:4]):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        assert int(r[4]["overflows"]) == 0
+        assert int(p[4]["overflows"]) == 0
+
+    def test_pooled_mixed_step_with_frees(self):
+        """Frees land on their recorded shard inside the kernel launch
+        and the freed capacity is reusable by the same launch's allocs."""
+        S, depth = 2, 5
+        pcfg = PoolConfig(TreeConfig(depth=depth), S)
+        # fill both shards completely at the leaf level
+        K0 = S << depth
+        lv0 = jnp.full(K0, depth, jnp.int32)
+        from repro.core.pool import pool_wavefront_alloc
+
+        trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), lv0, jnp.ones(K0, bool)
+        )
+        assert bool(ok.all())
+        # free half of each shard, then allocate one level-(depth-1)
+        # chunk per shard through the pooled kernel
+        keep = np.arange(K0) % 2 == 0
+        fn = jnp.asarray(np.asarray(nodes)[keep], jnp.int32)
+        fs = jnp.asarray(np.asarray(shard)[keep], jnp.int32)
+        fa = jnp.ones(fn.shape[0], bool)
+        levels = jnp.full(2, depth, jnp.int32)
+        trees2, n2, sh2, ok2, stats = nbbs_pool_wavefront_step(
+            pcfg, trees, fn, fs, fa, levels, impl="interpret"
+        )
+        assert bool(ok2.all())
+        assert int(stats["freed"]) == fn.shape[0]

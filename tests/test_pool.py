@@ -1,0 +1,236 @@
+"""Sharded allocator pool tests: S=1 bit-identity with the single tree,
+shard-by-shard differential replay through the sequential release oracle,
+overflow routing, and the cross-shard no-double-allocation property."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.concurrent import (
+    TreeConfig,
+    free_batch_sequential,
+    wavefront_alloc,
+    wavefront_step,
+)
+from repro.core.nbbs_jax import (
+    init_pool_state,
+    nb_pool_alloc,
+    nb_pool_free_batch,
+)
+from repro.core.pool import (
+    PoolConfig,
+    home_shard,
+    pool_free_round,
+    pool_wavefront_alloc,
+    pool_wavefront_free,
+    pool_wavefront_step,
+    probe_shard,
+)
+
+
+class TestPoolSingleShardIdentity:
+    """With S=1 every pool entry point must be bit-identical to its
+    single-tree counterpart (the acceptance bar for the refactor)."""
+
+    def test_alloc_bit_identical(self):
+        cfg = TreeConfig(depth=7, max_level=0)
+        pcfg = PoolConfig(cfg, 1)
+        rng = np.random.default_rng(0)
+        lv = jnp.asarray(rng.integers(2, 8, size=24), jnp.int32)
+        act = jnp.ones(24, bool)
+        t1, n1, ok1, s1 = wavefront_alloc(cfg, cfg.empty_tree(), lv, act)
+        tp, np_, sh, okp, sp = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), lv, act
+        )
+        assert (np.asarray(t1) == np.asarray(tp[0])).all()
+        assert (np.asarray(n1) == np.asarray(np_)).all()
+        assert (np.asarray(ok1) == np.asarray(okp)).all()
+        assert not np.asarray(sh).any()  # only shard 0 exists
+        assert int(s1["rounds"]) == int(sp["rounds"])
+        assert int(s1["merged_writes"]) == int(sp["merged_writes"])
+        assert int(s1["logical_rmws"]) == int(sp["logical_rmws"])
+        assert int(sp["overflows"]) == 0
+
+    def test_mixed_step_bit_identical(self):
+        cfg = TreeConfig(depth=6, max_level=0)
+        pcfg = PoolConfig(cfg, 1)
+        rng = np.random.default_rng(1)
+        tree, nodes, ok, _ = wavefront_alloc(
+            cfg, cfg.empty_tree(),
+            jnp.asarray(rng.integers(2, 7, size=16), jnp.int32),
+            jnp.ones(16, bool),
+        )
+        fn, fa = nodes[:8], ok[:8]
+        lv = jnp.asarray(rng.integers(1, 7, size=12), jnp.int32)
+        aa = jnp.ones(12, bool)
+        t1, n1, ok1, s1 = wavefront_step(cfg, tree, fn, fa, lv, aa)
+        tp, np_, sh, okp, sp = pool_wavefront_step(
+            pcfg, tree[None, :], fn, jnp.zeros(8, jnp.int32), fa, lv, aa
+        )
+        assert (np.asarray(t1) == np.asarray(tp[0])).all()
+        assert (np.asarray(n1) == np.asarray(np_)).all()
+        assert int(s1["freed"]) == int(sp["freed"])
+        assert int(s1["free_merged_writes"]) == int(sp["free_merged_writes"])
+        assert int(s1["free_logical_rmws"]) == int(sp["free_logical_rmws"])
+
+
+class TestPoolRouting:
+    def test_home_shard_deterministic_and_spread(self):
+        pcfg = PoolConfig(TreeConfig(depth=5), 4)
+        ids = jnp.arange(64, dtype=jnp.int32)
+        h1 = np.asarray(home_shard(pcfg, ids))
+        h2 = np.asarray(home_shard(pcfg, ids))
+        assert (h1 == h2).all()
+        assert set(h1.tolist()) == {0, 1, 2, 3}  # hash uses every shard
+        assert (np.asarray(probe_shard(pcfg, jnp.asarray(h1), 1))
+                == (h1 + 1) % 4).all()
+
+    def test_overflow_routes_to_next_shard(self):
+        """Lanes homed to one shard overflow to the probe successor when
+        their home exhausts — the burst completes across the pool."""
+        pcfg = PoolConfig(TreeConfig(depth=5), 4)  # 32 units per shard
+        K = 40
+        lane_ids = jnp.zeros(K, jnp.int32)  # everyone homes to one shard
+        home = int(home_shard(pcfg, lane_ids)[0])
+        lv = jnp.full(K, 5, jnp.int32)      # unit leaves: 32 per shard
+        trees, nodes, shard, ok, stats = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), lv, jnp.ones(K, bool),
+            64, lane_ids,
+        )
+        assert bool(ok.all())               # one tree alone would fail
+        shard = np.asarray(shard)
+        assert (shard == home).sum() == 32  # home filled first
+        assert (shard == (home + 1) % 4).sum() == 8  # overflow to successor
+        assert int(stats["overflows"]) == 8
+
+    def test_exhausted_pool_fails_after_probing_every_shard(self):
+        pcfg = PoolConfig(TreeConfig(depth=3), 2)
+        K = 20                               # 16 leaves exist in total
+        lv = jnp.full(K, 3, jnp.int32)
+        trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), lv, jnp.ones(K, bool)
+        )
+        assert int(ok.sum()) == 16
+        assert not np.asarray(nodes)[~np.asarray(ok)].any()
+
+    def test_free_releases_on_recorded_shard(self):
+        pcfg = PoolConfig(TreeConfig(depth=4), 4)
+        lv = jnp.asarray([2, 3, 4, 4, 1, 2], jnp.int32)
+        trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), lv, jnp.ones(6, bool)
+        )
+        assert bool(ok.all())
+        trees, freed, _ = pool_wavefront_free(pcfg, trees, nodes, shard, ok)
+        assert bool(freed.all())
+        assert (np.asarray(trees) == 0).all()
+        # a second release of the same handles is dropped on every shard
+        trees2, freed2, _ = pool_wavefront_free(pcfg, trees, nodes, shard, ok)
+        assert not bool(freed2.any())
+        assert (np.asarray(trees2) == 0).all()
+
+
+class TestPoolDifferential:
+    def test_pooled_free_matches_shard_by_shard_sequential_scan(self):
+        """A pooled alloc/free trace replayed shard-by-shard through the
+        single-tree sequential oracle (`free_batch_sequential`) must
+        yield identical tree states — the pool adds routing, never new
+        release semantics."""
+        rng = np.random.default_rng(11)
+        for S, depth in [(2, 5), (4, 6)]:
+            pcfg = PoolConfig(TreeConfig(depth=depth), S)
+            trees = pcfg.empty_trees()
+            live = []  # (node, shard)
+            for step in range(8):
+                K = 12
+                lv = jnp.asarray(
+                    rng.integers(1, depth + 1, size=K), jnp.int32
+                )
+                lane_ids = jnp.asarray(
+                    rng.integers(0, 1000, size=K), jnp.int32
+                )
+                trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+                    pcfg, trees, lv, jnp.ones(K, bool), 64, lane_ids
+                )
+                live += [
+                    (int(n), int(s))
+                    for n, s, o in zip(
+                        np.asarray(nodes), np.asarray(shard), np.asarray(ok)
+                    )
+                    if o
+                ]
+                k = int(rng.integers(0, len(live) + 1))
+                if not k:
+                    continue
+                idx = rng.choice(len(live), size=k, replace=False)
+                sel = [live[i] for i in idx]
+                live = [
+                    x for i, x in enumerate(live) if i not in set(idx.tolist())
+                ]
+                fn = jnp.asarray([n for n, _ in sel], jnp.int32)
+                fs = jnp.asarray([s for _, s in sel], jnp.int32)
+                fa = jnp.ones(k, bool)
+                t_vec, _, _, freed = pool_free_round(
+                    pcfg, trees, fn, fs, fa
+                )
+                assert bool(np.asarray(freed).all())
+                # shard-by-shard sequential replay of the same frees
+                for s in range(S):
+                    mask = jnp.asarray(np.asarray(fs) == s)
+                    t_seq, _ = free_batch_sequential(
+                        pcfg.tree, trees[s], fn, fa & mask
+                    )
+                    assert (np.asarray(t_seq) == np.asarray(t_vec[s])).all()
+                trees = t_vec
+            # drain everything; every shard coalesces back to empty
+            if live:
+                fn = jnp.asarray([n for n, _ in live], jnp.int32)
+                fs = jnp.asarray([s for _, s in live], jnp.int32)
+                trees, freed, _ = pool_wavefront_free(
+                    pcfg, trees, fn, fs, jnp.ones(len(live), bool)
+                )
+                assert bool(freed.all())
+            assert (np.asarray(trees) == 0).all()
+
+
+class TestPoolStateAPI:
+    def test_alloc_free_roundtrip(self):
+        pcfg = PoolConfig(TreeConfig(depth=4), 4)
+        st = init_pool_state(pcfg)
+        handles = []
+        for i in range(6):
+            st, s, off, ok = nb_pool_alloc(pcfg, st, jnp.int32(2), i)
+            assert bool(ok)
+            handles.append((int(s), int(off)))
+        assert len(set(handles)) == 6
+        sh = jnp.asarray([s for s, _ in handles], jnp.int32)
+        off = jnp.asarray([o for _, o in handles], jnp.int32)
+        st, freed = nb_pool_free_batch(
+            pcfg, st, sh, off, jnp.ones(6, bool)
+        )
+        assert bool(freed.all())
+        assert (np.asarray(st.trees) == 0).all()
+
+    def test_stale_and_junk_handles_dropped(self):
+        pcfg = PoolConfig(TreeConfig(depth=4), 2)
+        st = init_pool_state(pcfg)
+        st, s, off, ok = nb_pool_alloc(pcfg, st, jnp.int32(1), 3)
+        assert bool(ok)
+        st, freed = nb_pool_free_batch(
+            pcfg, st, jnp.asarray([int(s)]), jnp.asarray([int(off)]),
+            jnp.ones(1, bool),
+        )
+        assert bool(freed[0])
+        # double free, out-of-range shard, out-of-range offset: all dropped
+        st2, freed2 = nb_pool_free_batch(
+            pcfg, st,
+            jnp.asarray([int(s), 7, 0]),
+            jnp.asarray([int(off), 0, 99]),
+            jnp.ones(3, bool),
+        )
+        assert not bool(freed2.any())
+        assert (np.asarray(st2.trees) == np.asarray(st.trees)).all()
+
+
+# The hypothesis property for overflow routing (a pool trace never
+# double-allocates a (shard, node) pair) lives in tests/test_properties.py
+# with the other hypothesis suites so this module stays dependency-free.

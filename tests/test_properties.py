@@ -25,6 +25,11 @@ from repro.core.concurrent import (  # noqa: E402
     wavefront_alloc,
     wavefront_step,
 )
+from repro.core.pool import (  # noqa: E402
+    PoolConfig,
+    pool_wavefront_alloc,
+    pool_wavefront_free,
+)
 from repro.core.ref import NBBSRef  # noqa: E402
 
 SETTINGS = dict(max_examples=40, deadline=None)
@@ -222,6 +227,79 @@ def test_wavefront_step_differential_vs_ref(bursts):
             cfg, tree, jnp.asarray(live, jnp.int32), jnp.ones(len(live), bool)
         )
     assert (np.asarray(tree) == 0).all()
+
+
+@given(
+    st.lists(
+        st.tuples(st.booleans(), st.integers(0, 2 ** 30)),
+        min_size=1,
+        max_size=30,
+    ),
+    st.sampled_from([2, 4]),
+    st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_pool_never_double_allocates_across_shards(ops, S, seed):
+    """Overflow routing safety (sharded pool): no matter how lanes
+    bounce between shards, a (shard, node) pair is never handed to two
+    live owners, per-shard address ranges stay disjoint (S1 per shard),
+    and draining returns every tree to all-zero (S2 corollary)."""
+    depth = 4
+    pcfg = PoolConfig(TreeConfig(depth=depth), S)
+    trees = pcfg.empty_trees()
+    rng = np.random.default_rng(seed)
+    live = {}  # (shard, node) -> (start, size)
+    for is_alloc, r in ops:
+        if not is_alloc and live:
+            k = 1 + r % len(live)
+            keys = list(live)
+            idx = rng.choice(len(keys), size=k, replace=False)
+            sel = [keys[i] for i in idx]
+            fn = jnp.asarray([n for _, n in sel], jnp.int32)
+            fs = jnp.asarray([s for s, _ in sel], jnp.int32)
+            trees, freed, _ = pool_wavefront_free(
+                pcfg, trees, fn, fs, jnp.ones(k, bool)
+            )
+            assert bool(freed.all())  # live handles always release
+            for key in sel:
+                del live[key]
+        else:
+            K = 1 + r % 6
+            lv = jnp.asarray(
+                [(r >> (3 * i)) % (depth + 1) for i in range(K)], jnp.int32
+            )
+            lane_ids = jnp.asarray(rng.integers(0, 1000, size=K), jnp.int32)
+            trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+                pcfg, trees, lv, jnp.ones(K, bool), 64, lane_ids
+            )
+            spans = {}
+            for n, s, o, L in zip(
+                np.asarray(nodes), np.asarray(shard), np.asarray(ok),
+                np.asarray(lv),
+            ):
+                if not o:
+                    continue
+                key = (int(s), int(n))
+                assert key not in live, "double allocation across the pool!"
+                level = int(n).bit_length() - 1
+                assert level == int(L)  # served at the requested level
+                size = (1 << depth) >> level
+                start = (int(n) - (1 << level)) * size
+                # S1 per shard: disjoint from every live block there
+                for (os_, _), (ostart, osize) in {**live, **spans}.items():
+                    if os_ != int(s):
+                        continue
+                    assert start + size <= ostart or ostart + osize <= start
+                spans[key] = (start, size)
+            live.update(spans)
+    if live:
+        fn = jnp.asarray([n for _, n in live], jnp.int32)
+        fs = jnp.asarray([s for s, _ in live], jnp.int32)
+        trees, freed, _ = pool_wavefront_free(
+            pcfg, trees, fn, fs, jnp.ones(len(live), bool)
+        )
+        assert bool(freed.all())
+    assert (np.asarray(trees) == 0).all()
 
 
 @given(op_stream(40))

@@ -110,6 +110,108 @@ class TestPagedKVManager:
         assert kv.fragmentation()["largest_run"] == 64
 
 
+class TestShardedPagedKVManager:
+    def test_sequence_lands_on_home_shard_within_range(self):
+        kv = PagedKVManager(64, page_tokens=16, n_shards=4)
+        assert kv.add_sequence(7, 100)
+        s = kv.seqs[7]
+        assert s.shard == kv.home_shard(7)
+        lo = s.shard * kv.pages_per_shard
+        assert all(
+            lo <= p < lo + kv.pages_per_shard for r in s.runs for p in r
+        )
+
+    def test_overflow_admission_probes_next_shard(self):
+        kv = PagedKVManager(64, page_tokens=1, n_shards=4)
+        # fill seq 1's home shard completely, then admit another
+        # sequence with the same home: it must land on a different shard
+        home = kv.home_shard(1)
+        assert kv.add_sequence(1, 16)  # entire home shard
+        assert kv.seqs[1].shard == home
+        clone = next(
+            i for i in range(2, 200)
+            if kv.home_shard(i) == home
+        )
+        assert kv.add_sequence(clone, 16)
+        assert kv.seqs[clone].shard == (home + 1) % 4
+        # pool full only when every shard is full
+        others = []
+        i = 1000
+        while kv.free_pages():
+            if kv.add_sequence(i, 16):
+                others.append(i)
+            i += 1
+        assert not kv.add_sequence(i + 1, 1)
+
+    def test_burst_release_per_shard_and_invariants(self):
+        kv = PagedKVManager(64, page_tokens=16, n_shards=2)
+        ids = []
+        for i in range(8):
+            assert kv.add_sequence(i, 16 * 4)
+            ids.append(i)
+        shards = {kv.seqs[i].shard for i in ids}
+        assert shards == {0, 1}  # hash spreads across both shards
+        kv.free_sequences(ids)
+        assert kv.free_pages() == 64
+        for b in kv.buddies:
+            b.check_invariants()
+
+    def test_growth_stays_on_recorded_shard(self):
+        kv = PagedKVManager(64, page_tokens=4, n_shards=4)
+        assert kv.add_sequence(1, 4)
+        shard = kv.seqs[1].shard
+        for _ in range(20):
+            assert kv.append_tokens(1, 1)
+        s = kv.seqs[1]
+        assert s.shard == shard
+        lo = shard * kv.pages_per_shard
+        assert all(
+            lo <= p < lo + kv.pages_per_shard for r in s.runs for p in r
+        )
+
+    def test_fragmentation_reports_per_shard(self):
+        kv = PagedKVManager(64, page_tokens=16, n_shards=4)
+        assert kv.add_sequence(1, 16 * 4)
+        f = kv.fragmentation()
+        assert len(f["per_shard_free"]) == 4
+        assert sum(f["per_shard_free"]) == f["free_pages"]
+        assert f["largest_run"] == 16  # three shards still empty
+
+    def test_invalid_shard_counts_rejected(self):
+        with pytest.raises(ValueError):
+            PagedKVManager(64, page_tokens=16, n_shards=3)
+        with pytest.raises(ValueError):
+            PagedKVManager(64, page_tokens=16, n_shards=0)
+
+    def test_oversized_sequence_raises_not_false(self):
+        """A request bigger than one shard can never be admitted — that
+        must surface as an error, not as a retriable 'pool full'."""
+        kv = PagedKVManager(64, page_tokens=1, n_shards=4)  # 16/shard
+        with pytest.raises(ValueError):
+            kv.add_sequence(1, 17)
+        assert 1 not in kv.seqs
+        assert kv.free_pages() == 64
+
+    def test_engine_rejects_impossible_request_without_blocking(self):
+        """An unadmittable request must not head-of-line block the
+        engine: it is rejected and the queue behind it still serves."""
+        cfg = get_config("stablelm-3b").reduced()
+        params = init_params(cfg, KEY)
+        eng = ServeEngine(
+            cfg, params, num_pages=16, page_tokens=4, max_batch=4,
+            dtype=jnp.float32, n_shards=2,
+        )
+        rng = np.random.default_rng(12)
+        # needs ceil(40/4)=10 pages -> run of 16 > 8 per shard
+        eng.submit(Request(0, rng.integers(0, 200, 30).astype(np.int32), 10))
+        eng.submit(Request(1, rng.integers(0, 200, 4).astype(np.int32), 3))
+        eng.run_to_completion(max_steps=100)
+        assert eng.stats["rejected"] == 1
+        assert not eng.completed[0].out_tokens  # rejected, never decoded
+        assert len(eng.completed[1].out_tokens) == 3
+        assert eng.kv.free_pages() == 16
+
+
 class TestServeEngine:
     def _engine(self, **kw):
         cfg = get_config("stablelm-3b").reduced()
@@ -160,6 +262,28 @@ class TestServeEngine:
         eng.submit(Request(1, rng.integers(0, 200, 3).astype(np.int32), 4))
         eng.run_to_completion()
         assert len(eng.completed) == 2
+
+    def test_sharded_engine_run_to_completion(self):
+        """The engine on a 2-shard page pool serves and fully releases
+        the same workload (sequences land on per-shard buddy trees)."""
+        cfg = get_config("stablelm-3b").reduced()
+        params = init_params(cfg, KEY)
+        eng = ServeEngine(
+            cfg, params, num_pages=64, page_tokens=4, max_batch=4,
+            dtype=jnp.float32, n_shards=2,
+        )
+        rng = np.random.default_rng(9)
+        for i in range(5):
+            eng.submit(Request(
+                i,
+                rng.integers(0, 200, size=int(rng.integers(3, 9))).astype(np.int32),
+                max_new_tokens=4,
+            ))
+        eng.run_to_completion()
+        assert len(eng.completed) == 5
+        assert eng.kv.free_pages() == 64
+        for b in eng.kv.buddies:
+            b.check_invariants()
 
     def test_queueing_under_memory_pressure(self):
         cfg = get_config("stablelm-3b").reduced()

@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Docs link checker (CI: the docs job).
+
+Scans README.md and docs/*.md for markdown links and verifies that
+every relative link resolves to an existing file, and that every
+intra-file anchor (#heading) matches a heading slug in the target.
+External (http/https/mailto) links are not fetched — only shape-checked.
+
+Exit code 0 = all links resolve; 1 = at least one broken link (listed).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, strip punctuation, dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\s-]", "", text, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", text)
+
+
+def anchors_of(path: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def check_file(md: Path, root: Path) -> list:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (
+            md if not path_part
+            else (md.parent / path_part).resolve()
+        )
+        if not dest.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in anchors_of(dest):
+                errors.append(
+                    f"{md.relative_to(root)}: missing anchor -> {target}"
+                )
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    docs = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    docs = [d for d in docs if d.exists()]
+    if not docs:
+        print("no docs found", file=sys.stderr)
+        return 1
+    errors = []
+    for md in docs:
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(docs)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
