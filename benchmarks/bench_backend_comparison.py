@@ -4,7 +4,7 @@ The paper compares against the Linux kernel buddy (128KB chunks through
 __get_free_pages); kernel modules are unavailable here, so the
 list-based Linux-style buddy (`FreeListBuddy`) stands in, configured
 with the same geometry (large chunks, page-sized units) — see
-DESIGN.md §7.  Tests: Linux Scalability and Thread Test patterns at
+docs/design.md §7.  Tests: Linux Scalability and Thread Test patterns at
 128KB, plus Constant Occupancy with 128KB max chunks.
 """
 

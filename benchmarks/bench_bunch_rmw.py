@@ -1,24 +1,56 @@
 """RMW-reduction measurement (paper §III-D: the 4-level bunch cuts the
 atomic-instruction count on the climb by ~4x; the TPU-native 32-bit
-variant by ~3x).  Reports word-RMWs per operation for the unpacked
-tree vs packed bunches, and the wavefront's merged-write count."""
+variant by ~3x).  Two sections:
+
+  1. host allocators — word-RMWs per operation for the unpacked tree vs
+     packed `BunchBuddy` variants, plus the wavefront's merged-write
+     count (the vector-width limit of the same idea);
+  2. device layouts — the SAME workloads replayed through
+     `TreeConfig(layout=UNPACKED)` vs `TreeConfig(layout=BUNCH_PACKED)`
+     (docs/design.md §3): allocation outcomes are asserted bit-identical
+     first, then merged climb writes / logical RMWs / state footprint
+     are recorded per workload (mixed-octave burst, constant occupancy)
+     and appended to BENCH_BUNCH_LAYOUT.json.  The packed column must be
+     strictly below the unpacked one — the §III-D claim carried through
+     the merged substrate.
+
+`BENCH_FAST=1` shrinks trees/ops for the CI smoke job (both layouts
+still run).
+"""
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import WavefrontAllocator, row
+from benchmarks.common import WavefrontAllocator, dump_bench_json, row
 from repro.core.bunch import BunchBuddy
+from repro.core.concurrent import (
+    BUNCH_PACKED,
+    TreeConfig,
+    UNPACKED,
+    wavefront_alloc,
+    wavefront_free,
+    wavefront_step,
+)
 from repro.core.ref import NBBSRef
 
-TOTAL_MEM = 1 << 16
+FAST = os.environ.get("BENCH_FAST") == "1"
+
+TOTAL_MEM = 1 << (12 if FAST else 16)
 MIN_SIZE = 1
-OPS = 2_000
+OPS = 300 if FAST else 2_000
+
+# device-layout sweep geometry
+DEV_DEPTH = 8 if FAST else 12
+DEV_WIDTH = 32 if FAST else 128
+CHURN_ROUNDS = 4 if FAST else 10
 
 
-def run() -> None:
+def _host_section() -> None:
     rng = np.random.default_rng(2)
     sizes = [1, 1, 2, 4, 8, 16]
 
@@ -56,10 +88,8 @@ def run() -> None:
 
     # wavefront merged writes: the vector-width limit of the same idea
     units = TOTAL_MEM // MIN_SIZE
-    for w in (8, 32, 128):
+    for w in (8, 32) if FAST else (8, 32, 128):
         wa = WavefrontAllocator(units, w)
-        from repro.core.concurrent import wavefront_alloc
-
         lv = jnp.full(w, 10, jnp.int32)
         tree, nodes, ok, stats = wavefront_alloc(
             wa.cfg, wa.tree, lv, jnp.ones(w, bool)
@@ -69,6 +99,116 @@ def run() -> None:
         row("wavefront_merged_writes", "nb-wavefront", w, w, 1e-9,
             extra=f"merged={merged};logical={logical};"
                   f"reduction={logical / max(merged, 1):.2f}x")
+
+
+def _mixed_octave_burst(cfg: TreeConfig, rng) -> dict:
+    """One saturating mixed-octave burst + its full release."""
+    K = DEV_WIDTH
+    levels = jnp.asarray(
+        rng.integers(cfg.depth - 7, cfg.depth + 1, size=K), jnp.int32
+    )
+    tree, nodes, ok, stats = wavefront_alloc(
+        cfg, cfg.empty_tree(), levels, jnp.ones(K, bool)
+    )
+    tree, freed, fstats = wavefront_free(cfg, tree, nodes, ok)
+    assert (np.asarray(tree) == 0).all()
+    return {
+        "nodes": np.asarray(nodes),
+        "ok": np.asarray(ok),
+        "merged_writes": int(stats["merged_writes"])
+        + int(fstats["merged_writes"]),
+        "logical_rmws": int(stats["logical_rmws"])
+        + int(fstats["logical_rmws"]),
+        "rounds": int(stats["rounds"]),
+    }
+
+
+def _constant_occupancy(cfg: TreeConfig, rng) -> dict:
+    """Paper Fig. 11 shape: a skewed long-lived pool, then churn at
+    constant occupancy through `wavefront_step`."""
+    K = DEV_WIDTH
+    pool_levels = jnp.asarray(
+        np.concatenate([
+            rng.integers(cfg.depth - 3, cfg.depth + 1, size=3 * K // 4),
+            rng.integers(cfg.depth - 7, cfg.depth - 3, size=K - 3 * K // 4),
+        ]),
+        jnp.int32,
+    )
+    tree, nodes, ok, stats = wavefront_alloc(
+        cfg, cfg.empty_tree(), pool_levels, jnp.ones(K, bool)
+    )
+    merged = int(stats["merged_writes"])
+    logical = int(stats["logical_rmws"])
+    outcome = [np.asarray(nodes)]
+    for _ in range(CHURN_ROUNDS):
+        tree, nodes, ok, st = wavefront_step(
+            cfg, tree, nodes, ok, pool_levels, jnp.ones(K, bool)
+        )
+        merged += int(st["merged_writes"]) + int(st["free_merged_writes"])
+        logical += int(st["logical_rmws"]) + int(st["free_logical_rmws"])
+        outcome.append(np.asarray(nodes))
+    return {
+        "nodes": np.concatenate(outcome),
+        "ok": np.asarray(ok),
+        "merged_writes": merged,
+        "logical_rmws": logical,
+        "rounds": int(stats["rounds"]),
+    }
+
+
+def _device_layout_sweep() -> None:
+    cu = TreeConfig(depth=DEV_DEPTH, max_level=0, layout=UNPACKED)
+    cp = TreeConfig(depth=DEV_DEPTH, max_level=0, layout=BUNCH_PACKED)
+    records = []
+    for workload, fn in (
+        ("mixed_octave_burst", _mixed_octave_burst),
+        ("constant_occupancy", _constant_occupancy),
+    ):
+        # identical rng stream per layout: identical workloads
+        ru = fn(cu, np.random.default_rng(7))
+        rp = fn(cp, np.random.default_rng(7))
+        # outcomes must be bit-identical before costs are comparable
+        assert (ru["nodes"] == rp["nodes"]).all(), workload
+        assert (ru["ok"] == rp["ok"]).all(), workload
+        assert rp["merged_writes"] < ru["merged_writes"], (
+            "packed climb writes must be strictly below unpacked",
+            workload, rp["merged_writes"], ru["merged_writes"],
+        )
+        rec = {
+            "workload": workload,
+            "depth": DEV_DEPTH,
+            "width": DEV_WIDTH,
+            "fast_mode": FAST,
+            "n_words": cu.n_state_words,
+            "n_state_words": cp.n_state_words,
+            "state_ratio": cp.n_state_words / cu.n_state_words,
+            "unpacked_merged_writes": ru["merged_writes"],
+            "packed_merged_writes": rp["merged_writes"],
+            "unpacked_logical_rmws": ru["logical_rmws"],
+            "packed_logical_rmws": rp["logical_rmws"],
+            "merged_reduction": ru["merged_writes"]
+            / max(rp["merged_writes"], 1),
+        }
+        assert rec["state_ratio"] <= 0.25
+        records.append(rec)
+        row(
+            "bunch_layout_sweep", workload, DEV_WIDTH, DEV_WIDTH, 1e-9,
+            extra=(
+                f"unpacked_merged={rec['unpacked_merged_writes']};"
+                f"packed_merged={rec['packed_merged_writes']};"
+                f"reduction={rec['merged_reduction']:.2f}x;"
+                f"state_ratio={rec['state_ratio']:.3f}"
+            ),
+        )
+    if not FAST:
+        # never clobber the committed full-run trajectory with the
+        # tiny smoke geometry
+        dump_bench_json("BENCH_BUNCH_LAYOUT.json", records)
+
+
+def run() -> None:
+    _host_section()
+    _device_layout_sweep()
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 """Roofline table generator: aggregates the dry-run cell JSONs into the
-EXPERIMENTS.md §Roofline table (single-pod mesh per the spec; the
+docs/experiments.md §Roofline table (single-pod mesh per the spec; the
 multi-pod pass proves the 'pod' axis shards)."""
 
 from __future__ import annotations

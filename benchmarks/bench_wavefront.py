@@ -1,10 +1,16 @@
 """Wavefront scaling on the device substrate: arbitration rounds and
 merged word-updates vs width, on empty and fragmented trees — the
 structural (hardware-independent) scalability evidence that complements
-the wall-clock Figs 8-11 analogues."""
+the wall-clock Figs 8-11 analogues.  The width sweep runs under both
+tree-state layouts (docs/design.md §3) so the packed layout's climb
+economy is visible on the same workloads.
+
+`BENCH_FAST=1` shrinks the geometry (tiny tree, 2 shards, fewer widths
+and reps; both layouts still run) for the CI smoke job."""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -13,7 +19,9 @@ import numpy as np
 
 from benchmarks.common import dump_bench_json, row
 from repro.core.concurrent import (
+    BUNCH_PACKED,
     TreeConfig,
+    UNPACKED,
     free_batch,
     wavefront_alloc,
     wavefront_free,
@@ -25,74 +33,82 @@ from repro.core.pool import (
     pool_wavefront_free,
 )
 
-DEPTH = 14  # 16K units
+FAST = os.environ.get("BENCH_FAST") == "1"
+
+DEPTH = 8 if FAST else 14  # 16K units full, 256 fast
 # Shard sweep geometry: equal total capacity for every S (a pool of S
 # trees of depth D-log2(S) holds exactly 2^D units).
-SHARD_TOTAL_DEPTH = 12
-SHARD_COUNTS = (1, 2, 4, 8)
+SHARD_TOTAL_DEPTH = 8 if FAST else 12
+SHARD_COUNTS = (1, 2) if FAST else (1, 2, 4, 8)
+WIDTHS = (1, 16) if FAST else (1, 4, 16, 64, 256)
+REPS = 2 if FAST else 20
+LAYOUTS = (("unpacked", UNPACKED), ("packed", BUNCH_PACKED))
 
 
 def run() -> None:
-    cfg = TreeConfig(depth=DEPTH, max_level=0)
     rng = np.random.default_rng(3)
 
-    for width in (1, 4, 16, 64, 256):
-        levels = jnp.asarray(
-            rng.integers(DEPTH - 6, DEPTH + 1, size=width), jnp.int32
-        )
-        # compile
-        tree, nodes, ok, stats = wavefront_alloc(
-            cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
-        )
-        jax.block_until_ready(tree)
-        t0 = time.perf_counter()
-        REPS = 20
-        for _ in range(REPS):
+    for lname, layout in LAYOUTS:
+        cfg = TreeConfig(depth=DEPTH, max_level=0, layout=layout)
+        alloc_name = f"nb-wavefront-{lname}"
+        for width in WIDTHS:
+            levels = jnp.asarray(
+                rng.integers(DEPTH - 6, DEPTH + 1, size=width), jnp.int32
+            )
+            # compile
             tree, nodes, ok, stats = wavefront_alloc(
                 cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
             )
-        jax.block_until_ready(tree)
-        dt = time.perf_counter() - t0
-        row(
-            "wavefront_scaling", "nb-wavefront", width, REPS * width, dt,
-            extra=(
-                f"rounds={int(stats['rounds'])};"
-                f"merged={int(stats['merged_writes'])};"
-                f"logical={int(stats['logical_rmws'])}"
-            ),
-        )
+            jax.block_until_ready(tree)
+            t0 = time.perf_counter()
+            for _ in range(REPS):
+                tree, nodes, ok, stats = wavefront_alloc(
+                    cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
+                )
+            jax.block_until_ready(tree)
+            dt = time.perf_counter() - t0
+            row(
+                "wavefront_scaling", alloc_name, width, REPS * width, dt,
+                extra=(
+                    f"rounds={int(stats['rounds'])};"
+                    f"merged={int(stats['merged_writes'])};"
+                    f"logical={int(stats['logical_rmws'])}"
+                ),
+            )
 
-    # free-side scaling: merged release pass vs per-free logical RMWs
-    for width in (1, 4, 16, 64, 256):
-        levels = jnp.asarray(
-            rng.integers(DEPTH - 6, DEPTH + 1, size=width), jnp.int32
-        )
-        tree, nodes, ok, _ = wavefront_alloc(
-            cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
-        )
-        # compile once, then time the merged release
-        t1, freed, fstats = wavefront_free(cfg, tree, nodes, ok)
-        jax.block_until_ready(t1)
-        t0 = time.perf_counter()
-        REPS = 20
-        for _ in range(REPS):
+        # free-side scaling: merged release pass vs per-free logical RMWs
+        for width in WIDTHS:
+            levels = jnp.asarray(
+                rng.integers(DEPTH - 6, DEPTH + 1, size=width), jnp.int32
+            )
+            tree, nodes, ok, _ = wavefront_alloc(
+                cfg, cfg.empty_tree(), levels, jnp.ones(width, bool)
+            )
+            # compile once, then time the merged release
             t1, freed, fstats = wavefront_free(cfg, tree, nodes, ok)
-        jax.block_until_ready(t1)
-        dt = time.perf_counter() - t0
-        row(
-            "wavefront_free_scaling", "nb-wavefront", width, REPS * width, dt,
-            extra=(
-                f"merged={int(fstats['merged_writes'])};"
-                f"logical={int(fstats['logical_rmws'])};"
-                f"freed={int(freed.sum())}"
-            ),
-        )
+            jax.block_until_ready(t1)
+            t0 = time.perf_counter()
+            for _ in range(REPS):
+                t1, freed, fstats = wavefront_free(cfg, tree, nodes, ok)
+            jax.block_until_ready(t1)
+            dt = time.perf_counter() - t0
+            row(
+                "wavefront_free_scaling", alloc_name, width, REPS * width,
+                dt,
+                extra=(
+                    f"merged={int(fstats['merged_writes'])};"
+                    f"logical={int(fstats['logical_rmws'])};"
+                    f"freed={int(freed.sum())}"
+                ),
+            )
+
+    cfg = TreeConfig(depth=DEPTH, max_level=0)
 
     # Constant Occupancy workload (paper Fig. 11), release side: a skewed
     # long-lived pool, then dealloc/realloc bursts at constant occupancy
     # through wavefront_step — report free-side merged writes vs the
     # paper's per-free RMW count (Fig. 7 metric, release side).
-    for width in (64, 256):
+    for width in (16,) if FAST else (64, 256):
         pool_levels = jnp.asarray(
             np.concatenate([
                 rng.integers(DEPTH - 3, DEPTH + 1, size=3 * width // 4),
@@ -104,7 +120,7 @@ def run() -> None:
             cfg, cfg.empty_tree(), pool_levels, jnp.ones(width, bool)
         )
         merged_total = logical_total = 0
-        ROUNDS = 10
+        ROUNDS = 3 if FAST else 10
         t0 = time.perf_counter()
         for _ in range(ROUNDS):
             # constant occupancy: free the pool burst, re-allocate the
@@ -139,9 +155,10 @@ def run() -> None:
     # fewer (vmapped, per-round-parallel) rounds.  Per-shard merged vs
     # logical RMW stats extend the Fig. 7 metric to the pool.
     shard_records = []
-    K = 64
+    # mixed octaves at ~66-72% of total capacity in either geometry
+    K = 16 if FAST else 64
     srng = np.random.default_rng(3)
-    sizes = 2 ** srng.integers(0, 9, size=K)  # mixed octaves, ~72% demand
+    sizes = 2 ** srng.integers(0, 6 if FAST else 9, size=K)
     for S in SHARD_COUNTS:
         sd = SHARD_TOTAL_DEPTH - (S.bit_length() - 1)
         pcfg = PoolConfig(TreeConfig(depth=sd), S)
@@ -153,7 +170,6 @@ def run() -> None:
         )
         jax.block_until_ready(trees)
         t0 = time.perf_counter()
-        REPS = 20
         for _ in range(REPS):
             trees, nodes, shard, ok, stats = pool_wavefront_alloc(
                 pcfg, pcfg.empty_trees(), levels, active
@@ -206,18 +222,20 @@ def run() -> None:
     assert all(r["ok"] == K for r in shard_records), (
         "the burst must complete on every pool size", shard_records
     )
-    assert by_s[4]["rounds"] < by_s[1]["rounds"], (
-        "S=4 must complete the saturating burst in fewer rounds than S=1",
-        by_s[4]["rounds"], by_s[1]["rounds"],
-    )
-    dump_bench_json("BENCH_WAVEFRONT_SHARDS.json", shard_records)
+    if not FAST:
+        assert by_s[4]["rounds"] < by_s[1]["rounds"], (
+            "S=4 must complete the saturating burst in fewer rounds than S=1",
+            by_s[4]["rounds"], by_s[1]["rounds"],
+        )
+        dump_bench_json("BENCH_WAVEFRONT_SHARDS.json", shard_records)
 
     # fragmented-tree behaviour: occupancy ~50% at mixed levels
     tree = cfg.empty_tree()
-    lv = jnp.asarray(rng.integers(6, DEPTH + 1, size=512), jnp.int32)
-    tree, nodes, ok, _ = wavefront_alloc(cfg, tree, lv, jnp.ones(512, bool))
-    tree, _ = free_batch(cfg, tree, nodes[::2], jnp.ones(256, bool))
-    for width in (16, 64):
+    FRAG = 64 if FAST else 512
+    lv = jnp.asarray(rng.integers(6, DEPTH + 1, size=FRAG), jnp.int32)
+    tree, nodes, ok, _ = wavefront_alloc(cfg, tree, lv, jnp.ones(FRAG, bool))
+    tree, _ = free_batch(cfg, tree, nodes[::2], jnp.ones(FRAG // 2, bool))
+    for width in (16,) if FAST else (16, 64):
         levels = jnp.asarray(
             rng.integers(DEPTH - 4, DEPTH + 1, size=width), jnp.int32
         )

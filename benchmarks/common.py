@@ -3,7 +3,7 @@
 All benchmarks emit CSV rows: name,allocator,width,ops,seconds,
 ops_per_sec,extra.  "width" is the wavefront width — the concurrency
 axis that maps the paper's thread count onto this substrate
-(DESIGN.md §2): lock-based allocators serialize a width-W batch,
+(docs/design.md §2): lock-based allocators serialize a width-W batch,
 the non-blocking wavefront commits it in a handful of arbitration
 rounds.
 """

@@ -65,3 +65,20 @@ print(f"committed {int(pok.sum())}/32 across shards {per_shard.tolist()} "
 trees, freed, _ = pool_wavefront_free(pcfg, trees, pnodes, shard, pok)
 assert (np.asarray(trees) == 0).all()
 print("burst release: one merged pass per shard, all trees empty  [OK]")
+
+print("\n== 6. packed-bunch device layout (§III-D on the wavefront) ==")
+from repro.core import BUNCH_PACKED, wavefront_free
+
+pcfg6 = TreeConfig(depth=10, max_level=0, layout=BUNCH_PACKED)
+ptree, pn, pko, pst = wavefront_alloc(
+    pcfg6, pcfg6.empty_tree(), levels, jnp.ones(32, bool)
+)
+assert (np.asarray(pn) == np.asarray(nodes)).all()  # same answers
+print(f"identical nodes to the unpacked tree; state "
+      f"{pcfg6.n_state_words} uint32 words vs {cfg.n_state_words} int32 "
+      f"(~{cfg.n_state_words / pcfg6.n_state_words:.1f}x smaller); "
+      f"merged climb writes {int(pst['merged_writes'])} vs "
+      f"{int(stats['merged_writes'])}")
+ptree, _, _ = wavefront_free(pcfg6, ptree, pn, pko)
+assert (np.asarray(ptree) == 0).all()
+print("packed release drains to an all-zero packed tree  [OK]")

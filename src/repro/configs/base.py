@@ -135,7 +135,7 @@ class ArchConfig:
     def supported_shapes(self) -> Dict[str, ShapeSpec]:
         shapes = dict(lm_shapes())
         if not self.subquadratic:
-            # long_500k needs sub-quadratic attention (DESIGN.md §5).
+            # long_500k needs sub-quadratic attention (docs/design.md §5).
             shapes.pop("long_500k")
         return shapes
 

@@ -3,7 +3,7 @@
 38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64
 [arXiv:2411.15242; hf]
 
-Faithfulness note (DESIGN.md §5): Zamba2 interleaves one *shared*
+Faithfulness note (docs/design.md §5): Zamba2 interleaves one *shared*
 full-attention block into the Mamba2 stack; we apply the shared block
 after every `attn_every=2` Mamba2 layers (19 sites), matching the
 alternation density of the reference model.  The per-site LoRA deltas of

@@ -8,13 +8,19 @@ Modules:
   concurrent  — batched wavefront allocator (jnp, jittable; kernel oracle)
   nbbs_jax    — single-op in-graph API on top of the wavefront
   pool        — sharded multi-tree pool (replicated trees + overflow routing)
-  bunch       — packed-word multi-level variant (paper §III-D)
+  bunch       — packed-word multi-level variant (paper §III-D, host)
+  layout      — device tree-state layouts: Unpacked / BunchPacked (§III-D)
 """
 
 from repro.core.bits import BUSY, OCC, STATUS_BITS  # noqa: F401
 from repro.core.bunch import BunchBuddy  # noqa: F401
 from repro.core.concurrent import (  # noqa: F401
+    BUNCH_PACKED,
+    BunchPacked,
     TreeConfig,
+    TreeLayout,
+    UNPACKED,
+    Unpacked,
     free_batch,
     free_batch_sequential,
     free_round,

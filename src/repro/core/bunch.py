@@ -15,7 +15,7 @@ are atomic by construction (the whole word is CAS'd), and the climb only
 touches the one bunch-leaf that is the parent of the lower bunch's root
 (one RMW per B levels instead of per level).
 
-Hardware adaptation (DESIGN.md §2): the TPU VPU has 32-bit lanes (int64
+Hardware adaptation (docs/design.md §2): the TPU VPU has 32-bit lanes (int64
 is emulated), so the device-side packing is **B=3 levels per uint32**
 (4 leaves x 5 bits = 20 bits).  The host-side allocator keeps the
 paper's **B=4 per uint64**.  Both are provided by this one

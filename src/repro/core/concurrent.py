@@ -2,7 +2,7 @@
 
 The paper's threads contend on tree words with CAS; losers retry.  A TPU
 has no threads or CAS, so the same optimistic-concurrency insight is
-re-thought for a data-parallel machine (DESIGN.md §2):
+re-thought for a data-parallel machine (docs/design.md §2):
 
   * a *wavefront* of K allocation requests is processed per round,
     entirely with vectorized bitwise/scan primitives (VPU-friendly);
@@ -49,24 +49,45 @@ Everything here is shape-static and jittable; the Pallas kernel
 the tree resident in VMEM and this module is its oracle.  `core/pool.py`
 replicates this tree S times and routes lanes across the replicas.
 
+The persistent tree *state* is pluggable (docs/design.md §3): every
+round operates through the `TreeConfig.layout` — `Unpacked` (one int32
+word per node, the historical format and the differential oracle) or
+`BunchPacked` (the paper's §III-D packing: B=3 levels / 4 leaf slots x
+5 bits per uint32 word, interior bits derived per Fig. 6 within the
+word, climbs crossing words only at bunch roots).  The rounds
+themselves are layout-agnostic: they scan the layout's derived
+*allocatable* predicate, arbitrate in node-index space, and hand winner
+/ freed node masks back to the layout's merged commit passes.  Both
+layouts produce identical allocation outcomes on identical traces
+(differentially tested); only the word-traffic stats differ — which is
+the point: packed `merged_writes` counts uint32 bunch words, ~B x fewer
+per climb.
+
 Invariants (deep-linked from docs/architecture.md):
 
   * node numbering: tree[0] is unused; the root is index 1, the
     children of node n are 2n and 2n+1, and level(n) = floor(log2 n)
     (`_level_of`) — every level-sliced pass below indexes the half-open
-    slice [2^lev, 2^(lev+1)) (paper Fig. 2);
-  * occupancy encoding: each word carries the 5-bit mask of
-    `core/bits.py`; a node is allocatable iff its word == 0 AND no
-    strict ancestor has OCC set (`_ancestor_occ` — paper T2 + T11);
-    branch occupancy of a quiescent tree is *derived*: a non-OCC node's
-    OCC_LEFT/OCC_RIGHT equal the OR over the corresponding child
-    sub-tree's reserved nodes, and no COAL bits remain (paper Fig. 6,
-    checked by `NBBSRef.check_invariants`);
+    slice [2^lev, 2^(lev+1)) (paper Fig. 2).  Node indices are
+    layout-independent: handles and arbitration scratch always live in
+    this space, whatever the state words look like;
+  * occupancy encoding: `Unpacked` carries the 5-bit mask of
+    `core/bits.py` per node; `BunchPacked` materializes it on bunch
+    leaves only and derives interior state (Fig. 6).  In both, a node
+    is allocatable iff its (derived) state is bit-free AND no strict
+    ancestor has (derived) OCC (paper T2 + T11); branch occupancy of a
+    quiescent tree is *derived*: a non-OCC node's OCC_LEFT/OCC_RIGHT
+    equal the OR over the corresponding child sub-tree's reserved
+    nodes, and no COAL bits remain (paper Fig. 6, checked by
+    `NBBSRef.check_invariants`);
   * double-free arbitration: `free_round` drops any free whose node
-    word lacks OCC (stale/junk handle), and when one batch carries
+    lacks (derived) OCC (stale/junk handle), and when one batch carries
     duplicate handles the minimum lane id wins — the same
     deterministic min-id arbitration the alloc side uses for
-    overlapping tentative assignments.
+    overlapping tentative assignments.  (Layout caveat: `BunchPacked`
+    cannot distinguish "n allocated" from "both children allocated", so
+    that one *junk*-handle case is layout-specific — see
+    `core/layout.py`.)
 """
 
 from __future__ import annotations
@@ -87,50 +108,47 @@ from repro.core.bits import (
     OCC_LEFT,
     OCC_RIGHT,
 )
+from repro.core.layout import (  # noqa: F401  (re-exported API)
+    BUNCH_PACKED,
+    BunchPacked,
+    TreeLayout,
+    UNPACKED,
+    Unpacked,
+    _level_of,
+)
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class TreeConfig:
-    """Static geometry of the allocator tree."""
+    """Static geometry of the allocator tree (+ its state layout)."""
 
     depth: int          # leaves are at this level; units = 2**depth
     max_level: int = 0  # largest allocatable block lives at this level
+    layout: TreeLayout = UNPACKED  # persistent-word format (core/layout.py)
 
     @property
     def n_words(self) -> int:
+        """Node-index space (layout-independent): 2^(depth+1)."""
         return 1 << (self.depth + 1)
 
+    @property
+    def n_state_words(self) -> int:
+        """Persistent state words of the configured layout."""
+        return self.layout.n_state_words(self)
+
+    @property
+    def state_dtype(self):
+        return self.layout.state_dtype
+
     def empty_tree(self) -> Array:
-        return jnp.zeros(self.n_words, dtype=jnp.int32)
-
-
-def _level_of(n: Array) -> Array:
-    """Tree level of node index n>=1 (vectorized floor(log2(n)))."""
-    return 31 - lax.clz(n.astype(jnp.int32))
+        return self.layout.empty_tree(self)
 
 
 # ---------------------------------------------------------------------------
 # Vectorized tree passes (static unrolled loops over levels)
 # ---------------------------------------------------------------------------
-
-
-def _ancestor_occ(cfg: TreeConfig, tree: Array) -> Array:
-    """anc[n] == True iff some strict ancestor of n has its OCC bit set.
-
-    One top-down pass; level slices are static so XLA sees d fused
-    vector ops (paper's is_free pre-check + T11 occupancy discovery,
-    evaluated for every node at once).
-    """
-    anc = jnp.zeros(cfg.n_words, dtype=bool)
-    for lev in range(1, cfg.depth + 1):
-        lo, hi = 1 << lev, 1 << (lev + 1)
-        parent_anc = anc[lo // 2 : hi // 2]
-        parent_occ = (tree[lo // 2 : hi // 2] & OCC) != 0
-        child_anc = jnp.repeat(parent_anc | parent_occ, 2)
-        anc = anc.at[lo:hi].set(child_anc)
-    return anc
 
 
 def _min_id_fields(cfg: TreeConfig, own: Array) -> Tuple[Array, Array]:
@@ -165,18 +183,19 @@ def alloc_round(
     nodes: Array,
 ):
     """One arbitration round of the wavefront (shared verbatim by the
-    jnp driver below and the Pallas kernel's loop body).
+    jnp driver below and the Pallas kernel's loop body; layout-agnostic
+    — state reads/writes go through `cfg.layout`).
 
     Returns (tree, nodes, pending, merged_writes, logical_rmws, won).
     """
+    layout = cfg.layout
     K = levels.shape[0]
     ids = jnp.arange(K, dtype=jnp.int32)
     inf = jnp.iinfo(jnp.int32).max
 
-    anc = _ancestor_occ(cfg, tree)
-    # CAS(0 -> BUSY) needs the word to be exactly zero (paper T2), and
-    # no fully-occupied ancestor may exist (paper T11).
-    allocatable = (tree == 0) & ~anc
+    # CAS(0 -> BUSY) needs the node's (derived) state to be bit-free
+    # (paper T2) and no fully-occupied ancestor may exist (paper T11).
+    allocatable = layout.allocatable(cfg, tree)
 
     target = jnp.zeros(K, dtype=jnp.int32)
     got = jnp.zeros(K, dtype=bool)
@@ -204,35 +223,14 @@ def alloc_round(
     desc, ancm = _min_id_fields(cfg, own)
     win = got & (ids < desc[target]) & (ids < ancm[target])
 
-    # --- commit winners: node word 0 -> BUSY (scatter-max is exact
-    # because the word is known-zero) ---------------------------------
+    # --- commit winners + merged climb (paper T2 + T6-T18, all
+    # winners at once) through the layout's packed/unpacked pass ------
     win_nodes = jnp.where(win, target, 0)
-    tree = tree.at[win_nodes].max(jnp.where(win, BUSY, 0))
-    marked = jnp.zeros(cfg.n_words, dtype=bool).at[win_nodes].set(win)
-    merged = jnp.int32(0)
-    # --- merged climb (paper T6-T18, all winners at once) ------------
-    for lev in range(cfg.depth, cfg.max_level, -1):
-        lo, hi = 1 << lev, 1 << (lev + 1)
-        pair = marked[lo:hi].reshape(-1, 2)
-        left_m, right_m = pair[:, 0], pair[:, 1]
-        or_mask = jnp.where(left_m, OCC_LEFT, 0) | jnp.where(
-            right_m, OCC_RIGHT, 0
-        )
-        clear_mask = jnp.where(left_m, COAL_LEFT, 0) | jnp.where(
-            right_m, COAL_RIGHT, 0
-        )
-        plo, phi = lo // 2, hi // 2
-        pv = tree[plo:phi]
-        tree = tree.at[plo:phi].set((pv | or_mask) & ~clear_mask)
-        touched = left_m | right_m
-        marked = marked.at[plo:phi].set(marked[plo:phi] | touched)
-        merged = merged + touched.sum(dtype=jnp.int32)
+    win_mask = jnp.zeros(cfg.n_words, dtype=bool).at[win_nodes].set(win)
+    tree, merged = layout.commit_allocs(cfg, tree, win_mask)
 
     nodes = jnp.where(win, target, nodes)
-    logical = win.sum(dtype=jnp.int32) + jnp.where(
-        win, levels - cfg.max_level, 0
-    ).sum(dtype=jnp.int32)
-    merged = merged + win.sum(dtype=jnp.int32)
+    logical = layout.alloc_logical_rmws(cfg, win, levels)
     pending = pending & ~win & ~exhausted
     return tree, nodes, pending, merged, logical, win
 
@@ -248,8 +246,9 @@ def wavefront_alloc(
     """Allocate a wavefront of requests.
 
     Args:
-      cfg: static tree geometry.
-      tree: int32[n_words] status-bit tree.
+      cfg: static tree geometry (its `layout` fixes the state format).
+      tree: `cfg.layout` state words (`cfg.n_state_words` of
+        `cfg.state_dtype`; int32[n_words] for the default `Unpacked`).
       levels: int32[K] target level per request (from `level_for_size`).
       active: bool[K] request-present mask.
       max_rounds: static bound on arbitration rounds (progress guarantees
@@ -371,7 +370,15 @@ def free_batch_sequential(
 ) -> Tuple[Array, Array]:
     """Release a batch of nodes one at a time (faithful FREENODE/UNMARK
     scan; one legal linearization).  O(K·depth) serialized steps — kept
-    as the differential oracle for `free_round`.  Returns (tree, writes)."""
+    as the differential oracle for `free_round`.  Returns (tree, writes).
+
+    Unpacked-only: the scan replays the paper's per-word bit protocol,
+    which has no meaning on packed state words."""
+    if not isinstance(cfg.layout, Unpacked):
+        raise ValueError(
+            "free_batch_sequential requires the Unpacked layout; "
+            f"got {cfg.layout!r} (use free_round / wavefront_free)"
+        )
 
     def step(carry, x):
         tree, writes = carry
@@ -390,29 +397,6 @@ def free_batch_sequential(
 # ---------------------------------------------------------------------------
 # Merged vectorized release (free-side wavefront)
 # ---------------------------------------------------------------------------
-
-
-def _free_logical_rmws(
-    cfg: TreeConfig, tree: Array, tgt: Array, valid: Array
-) -> Array:
-    """Per-free run-alone RMW count of the sequential release (the paper's
-    per-thread cost): the FREENODE climb CASes one word per level until
-    the first ancestor whose buddy branch is occupied, UNMARK re-CASes the
-    same segment, plus the one plain write of F19 — i.e. 2·climb + 1 per
-    free, evaluated against the pre-round tree."""
-    ub = cfg.max_level
-    cur = jnp.where(valid, tgt, 1)
-    climb = jnp.zeros(tgt.shape, jnp.int32)
-    stopped = ~valid
-    for _ in range(cfg.depth - ub):
-        in_climb = ~stopped & (_level_of(cur) > ub)
-        parent = cur >> 1
-        pv = tree[parent]
-        climb = climb + jnp.where(in_climb, 1, 0)
-        buddy_occ = (pv & (OCC_RIGHT << (cur & 1))) != 0
-        stopped = stopped | ~in_climb | buddy_occ
-        cur = parent
-    return jnp.where(valid, 2 * climb + 1, 0).sum(dtype=jnp.int32)
 
 
 def free_round(
@@ -434,13 +418,22 @@ def free_round(
     Frees whose word lacks OCC (double free / junk handle) are dropped.
 
     Returns (tree, merged_writes, logical_rmws, freed) — freed is the
-    bool[K] mask of frees actually applied; merged_writes counts words
-    the vector pass changed vs the paper's per-free logical_rmws.
+    bool[K] mask of frees actually applied; merged_writes counts state
+    words the vector pass changed vs the paper's per-free logical_rmws
+    (per-level CASes for `Unpacked`, per-bunch word RMWs for
+    `BunchPacked`).
     """
+    layout = cfg.layout
     K = nodes.shape[0]
     nodes = nodes.astype(jnp.int32)
     safe = jnp.clip(nodes, 0, cfg.n_words - 1)
-    valid = active & (nodes > 0) & ((tree[safe] & OCC) != 0)
+    # out-of-range ids are junk handles, not aliases of the last leaf
+    valid = (
+        active
+        & (nodes > 0)
+        & (nodes < cfg.n_words)
+        & layout.node_occ_at(cfg, tree, safe)
+    )
     tgt = jnp.where(valid, safe, 0)
     # duplicate handles within one batch: min lane id wins (the same
     # arbitration the alloc side uses), later duplicates are dropped so
@@ -453,34 +446,14 @@ def free_round(
     valid = valid & (own[tgt] == ids)
     tgt = jnp.where(valid, tgt, 0)
 
-    logical = _free_logical_rmws(cfg, tree, tgt, valid)
+    logical = layout.free_logical_rmws(cfg, tree, tgt, valid)
 
-    # -- phase 1: release all node words (F19, vectorized) ------------------
+    # -- phase 1 (F19, vectorized) + phase 2 (merged coalescing climb:
+    # FREENODE marks + UNMARK as one fixed-point sweep), both through
+    # the layout's release pass --------------------------------------
     freed = jnp.zeros(cfg.n_words, dtype=bool).at[tgt].set(valid)
     freed = freed.at[0].set(False)
-    merged = freed.sum(dtype=jnp.int32)
-    tree = jnp.where(freed, 0, tree)
-
-    # -- phase 2: merged coalescing climb (FREENODE marks + UNMARK) ---------
-    sub_occ = (tree & OCC) != 0   # bottom-up: sub-tree still reserved?
-    touched = freed               # bottom-up: some climb passes through
-    for lev in range(cfg.depth - 1, cfg.max_level - 1, -1):
-        lo, hi = 1 << lev, 1 << (lev + 1)
-        c_occ = sub_occ[2 * lo : 2 * hi].reshape(-1, 2)
-        c_tch = touched[2 * lo : 2 * hi].reshape(-1, 2)
-        any_tch = c_tch[:, 0] | c_tch[:, 1]
-        pv = tree[lo:hi]
-        derived = jnp.where(c_occ[:, 0], OCC_LEFT, 0) | jnp.where(
-            c_occ[:, 1], OCC_RIGHT, 0
-        )
-        own_occ = (pv & OCC) != 0
-        nv = jnp.where(any_tch & ~own_occ, derived, pv)
-        tree = tree.at[lo:hi].set(nv)
-        merged = merged + (nv != pv).sum(dtype=jnp.int32)
-        sub_occ = sub_occ.at[lo:hi].set(own_occ | c_occ[:, 0] | c_occ[:, 1])
-        # OR, not overwrite: an interior freed node has untouched children
-        # but must still propagate its own release to its ancestors.
-        touched = touched.at[lo:hi].set(touched[lo:hi] | any_tch)
+    tree, merged = layout.apply_frees(cfg, tree, freed)
     return tree, merged, logical, valid
 
 

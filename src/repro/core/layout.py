@@ -1,0 +1,492 @@
+"""Tree state layouts: one-word-per-node vs packed bunches (§III-D).
+
+The wavefront rounds of `core/concurrent.py` are layout-agnostic: they
+scan a per-node *allocatable* predicate, arbitrate winners in node-index
+space, and then hand the winner/freed node masks back to the layout to
+commit.  This module provides the two concrete layouts:
+
+  * `Unpacked` — the historical device layout: `int32[2^(depth+1)]`,
+    node n's 5-bit status word at index n.  One word RMW per level on a
+    climb; the differential oracle for every other layout.
+  * `BunchPacked` — the paper's §III-D packing adapted to 32-bit VPU
+    lanes (docs/design.md §3): B=3 tree levels per bunch, the bunch's
+    4 leaf nodes × 5 status bits packed into one uint32 word (20 bits).
+    Only bunch leaves are materialized; interior-node state is *derived*
+    within the word by the Fig. 6 rules (occ = AND over the leaf range's
+    OCC bits, branch occupancy = OR over the half-range's busy bits), so
+    a climb writes one word per B levels and the whole tree shrinks to
+    ~1/7 of the unpacked word count.
+
+Bunch layering is **bottom-aligned**: the deepest layer covers tree
+levels [depth-B+1, depth] with full 4-leaf bunches and the partial layer
+(if depth+1 is not a multiple of B) is the cheap one at the top — this
+keeps the packed word count <= ~n_words/7 for every depth, unlike the
+top-aligned layering of the host `core/bunch.py` whose partial *bottom*
+layer would dominate.  Layer k's words are stored contiguously, indexed
+by bunch-root node index minus the level base, top layer first.
+
+Packed-word bit layout (one uint32, B=3, leaf slots s0..s3 left-to-right
+in node order, 12 bits unused):
+
+       31 .. 20   19 .. 15   14 .. 10    9 .. 5     4 .. 0
+      [ unused ] [ slot 3 ] [ slot 2 ] [ slot 1 ] [ slot 0 ]
+                  each slot: OCC | COAL_L | COAL_R | OCC_L | OCC_R
+
+Canonical packed state (the quiescent-tree invariant all merged passes
+preserve): a slot inside an allocated node's leaf range holds BUSY
+(OCC|OCC_L|OCC_R — exactly what `core/bunch.py`'s range CAS writes), a
+slot above live sub-bunches holds the OR of its child bunches' occupancy
+as OCC_LEFT/OCC_RIGHT marks, every other slot is zero, and bunches below
+an allocated node are all-zero words.  COAL bits are never set by the
+device layouts: the merged release pass of `free_round` re-derives final
+occupancy in one sweep, so the sequential protocol's in-flight
+coalescing marks have no device-side counterpart.
+
+Stale-handle caveat (shared with the paper's §III-D packing): the packed
+bits cannot distinguish "node n allocated" from "both children of n
+allocated separately", so a *junk* free of n in the latter state is
+dropped by `Unpacked` (word lacks OCC) but releases both children under
+`BunchPacked` (derived OCC holds) — the same semantics as
+`core.bunch.BunchBuddy._free_node`.  On valid traces (every free matches
+a live allocation) the layouts are outcome-identical; the differential
+tests replay exactly those.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.bits import (
+    BUSY,
+    COAL_LEFT,
+    COAL_RIGHT,
+    OCC,
+    OCC_LEFT,
+    OCC_RIGHT,
+    STATUS_BITS,
+    STATUS_MASK,
+)
+
+Array = jax.Array
+
+
+def _level_of(n: Array) -> Array:
+    """Tree level of node index n>=1 (vectorized floor(log2(n)))."""
+    return 31 - lax.clz(n.astype(jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _bunch_layers(depth: int, bunch_levels: int) -> Tuple[Tuple[int, int, int], ...]:
+    """Static bunch layering, bottom-aligned: tuple of
+    (root_level, leaf_level, word_offset), top layer first.
+
+    Layer k covers tree levels [root_level, leaf_level]; its words are
+    keyed by bunch-root node index (one word per level-root_level node)
+    and stored contiguously from word_offset."""
+    spans = []
+    leaf = depth
+    while leaf >= 0:
+        root = max(leaf - (bunch_levels - 1), 0)
+        spans.append((root, leaf))
+        leaf = root - 1
+    spans.reverse()  # top-first
+    layers = []
+    off = 0
+    for root, leaf in spans:
+        layers.append((root, leaf, off))
+        off += 1 << root
+    return tuple(layers)
+
+
+def _ancestor_occ_from(depth: int, occ: Array) -> Array:
+    """anc[n] == True iff some strict ancestor of n is (derived) OCC.
+
+    One top-down pass over per-node occupancy booleans — the layout-
+    generic form of the paper's T11 occupancy discovery."""
+    anc = jnp.zeros(occ.shape, dtype=bool)
+    for lev in range(1, depth + 1):
+        lo, hi = 1 << lev, 1 << (lev + 1)
+        p = anc[lo // 2 : hi // 2] | occ[lo // 2 : hi // 2]
+        anc = anc.at[lo:hi].set(jnp.repeat(p, 2))
+    return anc
+
+
+@dataclasses.dataclass(frozen=True)
+class Unpacked:
+    """One int32 status word per tree node (index = node index).
+
+    The historical device layout and the differential oracle: every
+    method reproduces the pre-layout `core/concurrent.py` passes
+    word-for-word, so a `TreeConfig` without an explicit layout behaves
+    bit-identically to the pre-refactor allocator."""
+
+    name = "unpacked"
+
+    def n_state_words(self, cfg) -> int:
+        return 1 << (cfg.depth + 1)
+
+    @property
+    def state_dtype(self):
+        return jnp.int32
+
+    def empty_tree(self, cfg) -> Array:
+        return jnp.zeros(self.n_state_words(cfg), dtype=self.state_dtype)
+
+    # -- derived views -------------------------------------------------
+    def allocatable(self, cfg, tree: Array) -> Array:
+        """CAS(0 -> BUSY) needs the word to be exactly zero (paper T2)
+        and no fully-occupied ancestor may exist (paper T11)."""
+        occ = (tree & OCC) != 0
+        anc = _ancestor_occ_from(cfg.depth, occ)
+        return (tree == 0) & ~anc
+
+    def node_occ_at(self, cfg, tree: Array, nodes: Array) -> Array:
+        return (tree[nodes] & OCC) != 0
+
+    # -- merged alloc commit (paper T2 + T6-T18, all winners at once) --
+    def commit_allocs(self, cfg, tree: Array, win_mask: Array):
+        """Write BUSY into every winner's word, then one merged
+        bottom-up climb: branch-occupancy ORs of all winners' paths
+        applied level by level.  Returns (tree, merged_writes)."""
+        tree = jnp.where(win_mask, BUSY, tree)
+        marked = win_mask
+        merged = jnp.int32(0)
+        for lev in range(cfg.depth, cfg.max_level, -1):
+            lo, hi = 1 << lev, 1 << (lev + 1)
+            pair = marked[lo:hi].reshape(-1, 2)
+            left_m, right_m = pair[:, 0], pair[:, 1]
+            or_mask = jnp.where(left_m, OCC_LEFT, 0) | jnp.where(
+                right_m, OCC_RIGHT, 0
+            )
+            clear_mask = jnp.where(left_m, COAL_LEFT, 0) | jnp.where(
+                right_m, COAL_RIGHT, 0
+            )
+            plo, phi = lo // 2, hi // 2
+            pv = tree[plo:phi]
+            tree = tree.at[plo:phi].set((pv | or_mask) & ~clear_mask)
+            touched = left_m | right_m
+            marked = marked.at[plo:phi].set(marked[plo:phi] | touched)
+            merged = merged + touched.sum(dtype=jnp.int32)
+        merged = merged + win_mask.sum(dtype=jnp.int32)
+        return tree, merged
+
+    # -- merged release (batch FREENODE + UNMARK) ----------------------
+    def apply_frees(self, cfg, tree: Array, freed_mask: Array):
+        """Phase 1 clears every released node word at once (F19); phase
+        2 is one bottom-up sweep re-deriving branch occupancy along
+        touched paths (the fixed point of every sequential climb order).
+        Returns (tree, merged_writes)."""
+        merged = freed_mask.sum(dtype=jnp.int32)
+        tree = jnp.where(freed_mask, 0, tree)
+
+        sub_occ = (tree & OCC) != 0   # bottom-up: sub-tree still reserved?
+        touched = freed_mask          # bottom-up: some climb passes through
+        for lev in range(cfg.depth - 1, cfg.max_level - 1, -1):
+            lo, hi = 1 << lev, 1 << (lev + 1)
+            c_occ = sub_occ[2 * lo : 2 * hi].reshape(-1, 2)
+            c_tch = touched[2 * lo : 2 * hi].reshape(-1, 2)
+            any_tch = c_tch[:, 0] | c_tch[:, 1]
+            pv = tree[lo:hi]
+            derived = jnp.where(c_occ[:, 0], OCC_LEFT, 0) | jnp.where(
+                c_occ[:, 1], OCC_RIGHT, 0
+            )
+            own_occ = (pv & OCC) != 0
+            nv = jnp.where(any_tch & ~own_occ, derived, pv)
+            tree = tree.at[lo:hi].set(nv)
+            merged = merged + (nv != pv).sum(dtype=jnp.int32)
+            sub_occ = sub_occ.at[lo:hi].set(own_occ | c_occ[:, 0] | c_occ[:, 1])
+            # OR, not overwrite: an interior freed node has untouched
+            # children but must still propagate its release upward.
+            touched = touched.at[lo:hi].set(touched[lo:hi] | any_tch)
+        return tree, merged
+
+    # -- the paper's per-operation RMW cost model (Fig. 7) -------------
+    def alloc_logical_rmws(self, cfg, win: Array, levels: Array) -> Array:
+        """Run-alone sequential cost: one CAS for the node word plus one
+        per climbed level (T6-T18)."""
+        return win.sum(dtype=jnp.int32) + jnp.where(
+            win, levels - cfg.max_level, 0
+        ).sum(dtype=jnp.int32)
+
+    def free_logical_rmws(
+        self, cfg, tree: Array, tgt: Array, valid: Array
+    ) -> Array:
+        """Per-free run-alone RMW count of the sequential release: the
+        FREENODE climb CASes one word per level until the first ancestor
+        whose buddy branch is occupied, UNMARK re-CASes the same
+        segment, plus the one plain write of F19 — i.e. 2*climb + 1 per
+        free, evaluated against the pre-round tree."""
+        ub = cfg.max_level
+        cur = jnp.where(valid, tgt, 1)
+        climb = jnp.zeros(tgt.shape, jnp.int32)
+        stopped = ~valid
+        for _ in range(cfg.depth - ub):
+            in_climb = ~stopped & (_level_of(cur) > ub)
+            parent = cur >> 1
+            pv = tree[parent]
+            climb = climb + jnp.where(in_climb, 1, 0)
+            buddy_occ = (pv & (OCC_RIGHT << (cur & 1))) != 0
+            stopped = stopped | ~in_climb | buddy_occ
+            cur = parent
+        return jnp.where(valid, 2 * climb + 1, 0).sum(dtype=jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BunchPacked:
+    """Packed-bunch device layout (§III-D, 32-bit variant): B tree
+    levels per uint32 word, only bunch leaves materialized (5 bits per
+    leaf slot), interior state derived per Fig. 6 within the word.
+
+    All derived views are per-node boolean *scratch* arrays in the
+    unpacked node-index space — cheap VPU work recomputed per round;
+    only the packed words are persistent state (and the only thing the
+    merged-write counters charge for)."""
+
+    bunch_levels: int = 3
+    word_bits: int = 32
+
+    name = "bunch-packed"
+
+    def __post_init__(self):
+        leaves = 1 << (self.bunch_levels - 1)
+        if leaves * STATUS_BITS > self.word_bits:
+            raise ValueError(
+                f"bunch of {self.bunch_levels} levels needs "
+                f"{leaves * STATUS_BITS} bits > word size {self.word_bits}"
+            )
+
+    def layers(self, cfg) -> Tuple[Tuple[int, int, int], ...]:
+        return _bunch_layers(cfg.depth, self.bunch_levels)
+
+    def n_state_words(self, cfg) -> int:
+        root, _, off = self.layers(cfg)[-1]
+        return off + (1 << root)
+
+    @property
+    def state_dtype(self):
+        return jnp.uint32
+
+    def empty_tree(self, cfg) -> Array:
+        return jnp.zeros(self.n_state_words(cfg), dtype=self.state_dtype)
+
+    # ------------------------------------------------------------------
+    # Derived per-node views (Fig. 6 within each word)
+    # ------------------------------------------------------------------
+    def _slot_status(self, cfg, state: Array, layer) -> Array:
+        """int32[2^leaf_level] leaf-slot statuses of one layer, node
+        order (slot s of root r is node (r << (F-L)) + s)."""
+        L, F, off = layer
+        n_roots, n_slots = 1 << L, 1 << (F - L)
+        words = state[off : off + n_roots]
+        shifts = jnp.arange(n_slots, dtype=jnp.uint32) * STATUS_BITS
+        slots = (words[:, None] >> shifts[None, :]) & jnp.uint32(STATUS_MASK)
+        return slots.astype(jnp.int32).reshape(-1)
+
+    def derive(self, cfg, state: Array):
+        """(any5, occ, busy) bool[cfg.n_words] node-indexed views:
+        any5 = some status bit in the node's leaf range (the packed
+        analogue of word != 0), occ = AND of the range's OCC bits
+        (derived reservation), busy = OR of the range's busy bits
+        (sub-tree holds a reserved node)."""
+        n = 1 << (cfg.depth + 1)
+        any5 = jnp.zeros(n, dtype=bool)
+        occ = jnp.zeros(n, dtype=bool)
+        busy = jnp.zeros(n, dtype=bool)
+        for layer in self.layers(cfg):
+            L, F, _ = layer
+            st = self._slot_status(cfg, state, layer)
+            a = st != 0
+            o = (st & OCC) != 0
+            b = (st & BUSY) != 0
+            for lev in range(F, L - 1, -1):
+                lo, hi = 1 << lev, 1 << (lev + 1)
+                any5 = any5.at[lo:hi].set(a)
+                occ = occ.at[lo:hi].set(o)
+                busy = busy.at[lo:hi].set(b)
+                if lev > L:
+                    a = a.reshape(-1, 2).any(axis=1)
+                    o = o.reshape(-1, 2).all(axis=1)
+                    b = b.reshape(-1, 2).any(axis=1)
+        return any5, occ, busy
+
+    def allocatable(self, cfg, state: Array) -> Array:
+        """Derived T2+T11: the node's whole leaf range is bit-free and
+        no (derived-)occupied strict ancestor exists."""
+        any5, occ, _ = self.derive(cfg, state)
+        anc = _ancestor_occ_from(cfg.depth, occ)
+        return ~any5 & ~anc
+
+    def node_occ_at(self, cfg, state: Array, nodes: Array) -> Array:
+        _, occ, _ = self.derive(cfg, state)
+        return occ[nodes]
+
+    # ------------------------------------------------------------------
+    # Merged alloc commit: range CAS + cross-word climb, per word
+    # ------------------------------------------------------------------
+    def commit_allocs(self, cfg, state: Array, win_mask: Array):
+        """All winners at once: each bunch word ORs in (a) BUSY over the
+        leaf ranges of winners inside the bunch (the §III-D range CAS)
+        and (b) OCC_LEFT/OCC_RIGHT cross marks on leaf slots whose child
+        bunches contain a winner (the one-RMW-per-B-levels climb).
+        Interior bits re-derive from the leaves (Fig. 6), so the climb
+        only crosses words at bunch roots.  merged_writes counts packed
+        words whose value changed."""
+        depth = cfg.depth
+        # swin[n]: a winner lives in subtree(n) (including n itself)
+        swin = win_mask
+        for lev in range(depth - 1, -1, -1):
+            lo, hi = 1 << lev, 1 << (lev + 1)
+            child = swin[2 * lo : 2 * hi].reshape(-1, 2)
+            swin = swin.at[lo:hi].set(
+                swin[lo:hi] | child[:, 0] | child[:, 1]
+            )
+        merged = jnp.int32(0)
+        for L, F, off in self.layers(cfg):
+            n_roots, n_slots = 1 << L, 1 << (F - L)
+            # winners at-or-above each leaf slot *within this layer*
+            # (winners above the layer never touch it: their sub-bunches
+            # stay all-zero)
+            cl = win_mask[1 << L : 1 << (L + 1)]
+            for lev in range(L + 1, F + 1):
+                cl = jnp.repeat(cl, 2) | win_mask[1 << lev : 1 << (lev + 1)]
+            if F < depth:
+                sub = swin[1 << (F + 1) : 1 << (F + 2)].reshape(-1, 2)
+                bl, br = sub[:, 0], sub[:, 1]
+            else:
+                bl = br = jnp.zeros(1 << F, dtype=bool)
+            slot_or = (
+                jnp.where(cl, jnp.uint32(BUSY), jnp.uint32(0))
+                | jnp.where(bl, jnp.uint32(OCC_LEFT), jnp.uint32(0))
+                | jnp.where(br, jnp.uint32(OCC_RIGHT), jnp.uint32(0))
+            )
+            shifts = jnp.arange(n_slots, dtype=jnp.uint32) * STATUS_BITS
+            word_or = (
+                slot_or.reshape(n_roots, n_slots) << shifts[None, :]
+            ).sum(axis=1, dtype=jnp.uint32)
+            old = state[off : off + n_roots]
+            new = old | word_or
+            merged = merged + (new != old).sum(dtype=jnp.int32)
+            state = state.at[off : off + n_roots].set(new)
+        return state, merged
+
+    # ------------------------------------------------------------------
+    # Merged release: clear ranges, rebuild the canonical derived state
+    # ------------------------------------------------------------------
+    def apply_frees(self, cfg, state: Array, freed_mask: Array):
+        """Clear every freed node's leaf range (the §III-D one-word F19)
+        then one bottom-up sweep over *layers*: within each word the
+        interior bits re-derive from the surviving leaf occupancy
+        (Fig. 6), and the sweep crosses words only at bunch roots, where
+        each leaf slot's OCC_LEFT/OCC_RIGHT re-derive from its child
+        bunches' occupancy — the packed form of `free_round` phase 2's
+        fixed-point OR.  merged_writes counts packed words changed."""
+        depth = cfg.depth
+        layers = self.layers(cfg)
+        # per-layer surviving slot occupancy after clearing freed ranges
+        in_occ_new = {}
+        for layer in layers:
+            L, F, off = layer
+            st = self._slot_status(cfg, state, layer)
+            occ_leaf = (st & OCC) != 0
+            fl = freed_mask[1 << L : 1 << (L + 1)]
+            for lev in range(L + 1, F + 1):
+                fl = jnp.repeat(fl, 2) | freed_mask[1 << lev : 1 << (lev + 1)]
+            in_occ_new[off] = occ_leaf & ~fl
+        # bottom-up canonical rebuild (identity on untouched words)
+        merged = jnp.int32(0)
+        bocc = None  # child-layer bunch occupancy, keyed by bunch root
+        for L, F, off in reversed(layers):
+            n_roots, n_slots = 1 << L, 1 << (F - L)
+            in_occ = in_occ_new[off]
+            if F < depth:
+                sub = bocc.reshape(-1, 2)
+                bl, br = sub[:, 0], sub[:, 1]
+            else:
+                bl = br = jnp.zeros(1 << F, dtype=bool)
+            slot_val = (
+                jnp.where(in_occ, jnp.uint32(BUSY), jnp.uint32(0))
+                | jnp.where(bl, jnp.uint32(OCC_LEFT), jnp.uint32(0))
+                | jnp.where(br, jnp.uint32(OCC_RIGHT), jnp.uint32(0))
+            )
+            shifts = jnp.arange(n_slots, dtype=jnp.uint32) * STATUS_BITS
+            word_new = (
+                slot_val.reshape(n_roots, n_slots) << shifts[None, :]
+            ).sum(axis=1, dtype=jnp.uint32)
+            old = state[off : off + n_roots]
+            merged = merged + (word_new != old).sum(dtype=jnp.int32)
+            state = state.at[off : off + n_roots].set(word_new)
+            slot_busy = in_occ | bl | br
+            bocc = slot_busy.reshape(n_roots, n_slots).any(axis=1)
+        return state, merged
+
+    # ------------------------------------------------------------------
+    # §III-D word-RMW cost model: one RMW per bunch, not per level
+    # ------------------------------------------------------------------
+    # NOTE: these build their level predicates from static Python loops
+    # over the bunch-root levels (scalar compares, no constant arrays) so
+    # the shared round bodies stay Pallas-traceable — pallas_call rejects
+    # kernels that capture materialized jnp constants.
+
+    def _crosses_of(self, cfg, levels: Array) -> Array:
+        """Per-entry count of bunch-root levels in (max_level, level] —
+        the cross-word RMWs of a run-alone climb from that level."""
+        roots = {L for (L, _, _) in self.layers(cfg)}
+        crosses = jnp.zeros(levels.shape, jnp.int32)
+        for r in sorted(roots):
+            if cfg.max_level < r:
+                crosses = crosses + (levels >= r).astype(jnp.int32)
+        return crosses
+
+    def _is_root_level(self, cfg, levels: Array) -> Array:
+        roots = {L for (L, _, _) in self.layers(cfg)}
+        hit = jnp.zeros(levels.shape, bool)
+        for r in sorted(roots):
+            hit = hit | (levels == r)
+        return hit
+
+    def alloc_logical_rmws(self, cfg, win: Array, levels: Array) -> Array:
+        """Run-alone §III-D cost: one range CAS in the node's own word
+        plus one cross-leaf RMW per ancestor bunch."""
+        lv = jnp.clip(levels, 0, cfg.depth)
+        return jnp.where(win, 1 + self._crosses_of(cfg, lv), 0).sum(
+            dtype=jnp.int32
+        )
+
+    def free_logical_rmws(
+        self, cfg, state: Array, tgt: Array, valid: Array
+    ) -> Array:
+        """Run-alone §III-D release cost: the FREENODE walk takes its
+        buddy-occupancy decisions at *every* level (derived within
+        words) but RMWs only at cross-bunch boundaries; UNMARK re-walks
+        the same segment, plus the one range-clear word op — i.e.
+        2*cross_climb + 1 per free, against the pre-round state."""
+        _, _, busy = self.derive(cfg, state)
+        ub = cfg.max_level
+        cur = jnp.where(valid, tgt, 1)
+        climb = jnp.zeros(tgt.shape, jnp.int32)
+        stopped = ~valid
+        for _ in range(cfg.depth - ub):
+            lev = _level_of(cur)
+            in_climb = ~stopped & (lev > ub)
+            crossing = in_climb & self._is_root_level(
+                cfg, jnp.clip(lev, 0, cfg.depth)
+            )
+            climb = climb + jnp.where(crossing, 1, 0)
+            buddy = jnp.where(cur > 1, cur ^ 1, 0)
+            buddy_occ = busy[buddy]
+            stopped = stopped | ~in_climb | buddy_occ
+            cur = cur >> 1
+        return jnp.where(valid, 2 * climb + 1, 0).sum(dtype=jnp.int32)
+
+
+# The two canonical layout instances: default (oracle) and packed.
+UNPACKED = Unpacked()
+BUNCH_PACKED = BunchPacked()
+
+TreeLayout = Unpacked | BunchPacked

@@ -13,6 +13,13 @@ host round-trips).  `PoolAllocState` is the sharded analogue: S
 replicated (tree[], index[]) pairs stacked on a leading axis, routed by
 `core/pool.py`'s home-shard hash with overflow probing.
 
+The tree[] words follow the `TreeConfig.layout` (docs/design.md §3):
+`Unpacked` int32-per-node by default, or the §III-D `BunchPacked`
+uint32 bunch words (`TreeConfig(..., layout=BUNCH_PACKED)`).  Handles
+are node indices / (shard, unit_offset) pairs in both cases — the
+layout never leaks through this API, it only changes the persistent
+word format (and shrinks it ~7x when packed).
+
 Invariants (deep-linked from docs/architecture.md):
 
   * node numbering: root is index 1, children of n are 2n/2n+1, level
@@ -20,8 +27,10 @@ Invariants (deep-linked from docs/architecture.md):
     (n - 2^l) * 2^(depth-l) (`_node_to_unit_offset`, paper eq. 3);
   * occupancy encoding: tree[] words carry the 5-bit status mask of
     `core/bits.py` (OCC = this node reserved, OCC_LEFT/RIGHT = branch
-    occupancy, COAL_* = release in flight); a chunk is allocatable iff
-    its word is exactly 0 and no strict ancestor carries OCC;
+    occupancy, COAL_* = release in flight) — per node under `Unpacked`,
+    on bunch leaves with derived interiors under `BunchPacked`; a chunk
+    is allocatable iff its (derived) state is bit-free and no strict
+    ancestor carries (derived) OCC;
   * index[] maps a unit offset to the node that served it and keeps
     stale entries after release, exactly like the paper's NBFREE:
     double-free arbitration happens in `free_round`'s validity mask —
@@ -54,7 +63,7 @@ Array = jax.Array
 
 
 class AllocState(NamedTuple):
-    tree: Array   # int32[2^(depth+1)] status-bit tree
+    tree: Array   # cfg.layout state words (int32[2^(depth+1)] unpacked)
     index: Array  # int32[units] node that served each unit offset
 
 
@@ -132,7 +141,7 @@ def nb_alloc_size(
 
 
 class PoolAllocState(NamedTuple):
-    trees: Array  # int32[S, 2^(depth+1)] stacked status-bit trees
+    trees: Array  # [S, n_state_words] stacked layout state words
     index: Array  # int32[S, units] per-shard unit offset -> serving node
 
 

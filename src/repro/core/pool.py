@@ -6,8 +6,12 @@ replicas (scalloc's backend spans, SpeedMalloc's per-thread pools); the
 paper positions the non-blocking buddy system as exactly such a core
 allocator.  This module is that replication layer for the wavefront
 substrate: a pool of S independent status-bit trees, stacked as the
-leading axis of one `int32[S, n_words]` array so every per-tree pass of
-`core/concurrent.py` lifts to the pool with a single `jax.vmap`.
+leading axis of one `[S, n_state_words]` array (of the tree layout's
+state dtype — `int32[S, n_words]` for the default `Unpacked`, packed
+`uint32[S, n_words/7ish]` for `BunchPacked`; see `core/layout.py`) so
+every per-tree pass of `core/concurrent.py` lifts to the pool with a
+single `jax.vmap`.  Routing and handles live in node-index space, which
+is layout-independent, so the pool layer is oblivious to the packing.
 
 Routing (all in-graph, shape-static):
 
@@ -74,14 +78,22 @@ class PoolConfig:
 
     @property
     def n_words(self) -> int:
+        """Per-shard node-index space (layout-independent)."""
         return self.tree.n_words
+
+    @property
+    def n_state_words(self) -> int:
+        """Per-shard persistent state words of the configured layout."""
+        return self.tree.n_state_words
 
     @property
     def total_units(self) -> int:
         return self.n_shards << self.tree.depth
 
     def empty_trees(self) -> Array:
-        return jnp.zeros((self.n_shards, self.n_words), dtype=jnp.int32)
+        return jnp.zeros(
+            (self.n_shards, self.n_state_words), dtype=self.tree.state_dtype
+        )
 
 
 def home_shard(pcfg: PoolConfig, lane_ids: Array) -> Array:
@@ -170,7 +182,8 @@ def pool_wavefront_alloc(
 
     Args:
       pcfg: static pool geometry.
-      trees: int32[S, n_words] stacked status-bit trees.
+      trees: [S, n_state_words] stacked layout state words
+        (`pcfg.tree.state_dtype`; int32[S, n_words] for `Unpacked`).
       levels: int32[K] target level per request (per-shard-tree levels).
       active: bool[K] request-present mask.
       max_rounds: static bound on pool rounds (progress: every round each

@@ -21,7 +21,7 @@ Backward: `ops.flash_attention` wraps this forward in a jax.custom_vjp
 whose backward recomputes attention with the pure-jnp reference oracle
 (`ref.mha_reference`) — identical math, so gradients are exact while
 the forward enjoys the fused kernel.  (A fused Pallas backward is a
-further optimization documented in EXPERIMENTS.md §Perf.)
+further optimization documented in docs/experiments.md §Perf.)
 """
 
 from __future__ import annotations

@@ -3,11 +3,13 @@
 The paper's hot path is the alloc/free critical section: on x86 each
 climb step is an atomic RMW that takes a cache line exclusive (§III-D).
 On TPU the equivalent cost model is HBM round-trips per tree-word
-update.  This kernel removes them entirely: the whole status-bit tree
+update.  This kernel removes them entirely: the whole tree state
 lives in VMEM for the duration of a wavefront (a 2^19-node tree is
-2 MiB of int32 — comfortably VMEM-resident; the packed-bunch encoding
-of `core/bunch.py` shrinks it a further ~6x if ever needed), and every
-arbitration round is a handful of full-tree VPU passes:
+2 MiB of int32 unpacked; with `TreeConfig(layout=BUNCH_PACKED)` the
+VMEM-resident state is the §III-D packed bunch words — ~1/7 the word
+count, uint32 — and the merged climb touches ~B x fewer words, see
+`core/layout.py`), and every arbitration round is a handful of
+full-tree VPU passes:
 
   round =  top-down ancestor-OCC propagation        (d vector steps)
          + per-level rank/prefix-sum assignment      (d cumsums)
@@ -16,7 +18,12 @@ arbitration round is a handful of full-tree VPU passes:
 
 i.e. O(depth) (8,128)-lane vector ops per round regardless of how many
 requests commit — the vector-width limit of the paper's "one CAS per
-level per thread" cost model.
+level per thread" cost model.  The round body is `alloc_round` /
+`free_round` shared verbatim with `core/concurrent.py`, so the kernels
+are layout-agnostic too: block shapes come from `cfg.n_state_words` /
+`cfg.state_dtype`, and under `BunchPacked` the winner/freed commit
+passes write bunch-leaf range masks into packed words instead of
+per-node masks.
 
 The mixed entry point (`wavefront_step_pallas`) prepends the merged
 release pass (`free_round`): a whole burst of frees costs one O(depth)
@@ -27,7 +34,7 @@ all while the tree stays VMEM-resident.
 The pooled entry point (`pool_wavefront_step_pallas`) extends this to
 the sharded pool of `core/pool.py`: the grid iterates over shards, each
 program pulls exactly one shard's tree into VMEM (BlockSpec row slice of
-the stacked [S, n_words] array) and runs the full mixed step for the
+the stacked [S, n_state_words] array) and runs the full mixed step for the
 lanes routed to that shard (shard-membership masks computed in-kernel
 from `pl.program_id`).  Overflow probing happens *between* kernel
 launches (the `ops.nbbs_pool_wavefront_step` driver re-routes failed
@@ -45,7 +52,7 @@ which is precisely why the tree must be VMEM-resident (HBM-blocked
 variants would pay a round-trip per level, reproducing the x86 cache
 line ping-pong the paper fights).
 
-Mosaic-lowering caveat (documented per DESIGN.md §6): the round body
+Mosaic-lowering caveat (documented per docs/design.md §6): the round body
 uses one scatter (winner commit) and K-length gathers (arbitration
 reads); these lower on interpret mode (our validation path on this
 CPU-only container) and current Mosaic dynamic-gather support; the
@@ -194,19 +201,19 @@ def wavefront_step_pallas(
     tree_out, nodes, stats = pl.pallas_call(
         kernel,
         out_shape=[
-            jax.ShapeDtypeStruct((cfg.n_words,), jnp.int32),
+            jax.ShapeDtypeStruct((cfg.n_state_words,), cfg.state_dtype),
             jax.ShapeDtypeStruct((K,), jnp.int32),
             jax.ShapeDtypeStruct((6,), jnp.int32),
         ],
         in_specs=[
-            pl.BlockSpec((cfg.n_words,), lambda: (0,)),  # full tree in VMEM
+            pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),  # tree state in VMEM
             pl.BlockSpec((F,), lambda: (0,)),
             pl.BlockSpec((F,), lambda: (0,)),
             pl.BlockSpec((K,), lambda: (0,)),
             pl.BlockSpec((K,), lambda: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((cfg.n_words,), lambda: (0,)),
+            pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),
             pl.BlockSpec((K,), lambda: (0,)),
             pl.BlockSpec((6,), lambda: (0,)),
         ],
@@ -317,12 +324,12 @@ def pool_wavefront_step_pallas(
     trees_out, nodes_s, stats = pl.pallas_call(
         kernel,
         out_shape=[
-            jax.ShapeDtypeStruct((S, pcfg.n_words), jnp.int32),
+            jax.ShapeDtypeStruct((S, pcfg.n_state_words), pcfg.tree.state_dtype),
             jax.ShapeDtypeStruct((S, K), jnp.int32),
             jax.ShapeDtypeStruct((S, 6), jnp.int32),
         ],
         in_specs=[
-            pl.BlockSpec((1, pcfg.n_words), lambda s: (s, 0)),  # own shard tree
+            pl.BlockSpec((1, pcfg.n_state_words), lambda s: (s, 0)),  # own shard tree
             pl.BlockSpec((F,), lambda s: (0,)),
             pl.BlockSpec((F,), lambda s: (0,)),
             pl.BlockSpec((F,), lambda s: (0,)),
@@ -331,7 +338,7 @@ def pool_wavefront_step_pallas(
             pl.BlockSpec((K,), lambda s: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((1, pcfg.n_words), lambda s: (s, 0)),
+            pl.BlockSpec((1, pcfg.n_state_words), lambda s: (s, 0)),
             pl.BlockSpec((1, K), lambda s: (s, 0)),
             pl.BlockSpec((1, 6), lambda s: (s, 0)),
         ],
@@ -378,17 +385,17 @@ def wavefront_alloc_pallas(
     tree_out, nodes, stats = pl.pallas_call(
         kernel,
         out_shape=[
-            jax.ShapeDtypeStruct((cfg.n_words,), jnp.int32),
+            jax.ShapeDtypeStruct((cfg.n_state_words,), cfg.state_dtype),
             jax.ShapeDtypeStruct((K,), jnp.int32),
             jax.ShapeDtypeStruct((3,), jnp.int32),
         ],
         in_specs=[
-            pl.BlockSpec((cfg.n_words,), lambda: (0,)),  # full tree in VMEM
+            pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),  # tree state in VMEM
             pl.BlockSpec((K,), lambda: (0,)),
             pl.BlockSpec((K,), lambda: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((cfg.n_words,), lambda: (0,)),
+            pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),
             pl.BlockSpec((K,), lambda: (0,)),
             pl.BlockSpec((3,), lambda: (0,)),
         ],

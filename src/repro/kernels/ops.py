@@ -12,6 +12,11 @@ Selection policy (`impl`):
 `flash_attention` is differentiable: forward may use the fused kernel,
 backward recomputes through the reference (identical math -> exact
 gradients w.r.t. the reference function).
+
+The NBBS dispatchers are tree-layout-agnostic: the `cfg`/`pcfg` they
+take carries its `TreeLayout` (docs/design.md §3), and every impl path
+— reference, interpret, pallas — runs the same layout-parameterized
+round bodies, so packed and unpacked configs dispatch identically.
 """
 
 from __future__ import annotations

@@ -6,7 +6,7 @@ TPU scalar-prefetch pattern (`PrefetchScalarGridSpec`): the block table
 is prefetched into SMEM and the k/v BlockSpec index maps read it to
 steer each grid step's DMA at the right pool page — the TPU-native
 equivalent of vLLM's gather, with two NBBS-specific advantages
-(DESIGN.md §2): buddy blocks are power-of-two *contiguous* page runs,
+(docs/design.md §2): buddy blocks are power-of-two *contiguous* page runs,
 so (a) larger pages are addressable with the same table and (b) the
 pool fragments without external holes (the paper's coalescing at work).
 

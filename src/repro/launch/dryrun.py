@@ -92,7 +92,7 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, multi_pod: bool,
     """Returns (lowered, meta) for one cell.
 
     variant='opt' enables the beyond-paper optimizations recorded in
-    EXPERIMENTS.md §Perf: block-local MoE dispatch aligned to the data
+    docs/experiments.md §Perf: block-local MoE dispatch aligned to the data
     shards, capacity 2.0 serving dispatch, bf16-once parameter casting
     (bf16 FSDP gathers + bf16 gradient wire), gradient sharding
     constraints (reduce-scatter), and bf16 serving weights."""
@@ -228,7 +228,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "mesh": "2x16x16" if multi_pod else "16x16",
             "status": "skipped",
             "reason": "long_500k requires sub-quadratic attention "
-                      "(DESIGN.md §5)",
+                      "(docs/design.md §5)",
         }
     shape = shapes[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)

@@ -5,7 +5,7 @@ feature: the serving engine's KV page pool is managed by the NBBS
 (host-side: the paper-faithful `NBBSRef`; burst admission: the jnp
 wavefront — the same data structure, so both views stay coherent).
 
-Design points (DESIGN.md §2):
+Design points (docs/design.md §2):
   * a sequence's KV cache is a list of buddy *runs* — power-of-two
     contiguous page spans.  Growth allocates a run of the current run
     size (doubling), so a sequence of T tokens holds O(log T) runs and
@@ -52,7 +52,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.bits import FIB_HASH  # host/device routing must agree
-from repro.core.ref import NBBSRef
+from repro.core.ref import NBBSRef, _ilog2
 
 
 @dataclasses.dataclass
@@ -77,6 +77,7 @@ class PagedKVManager:
         max_run_pages: Optional[int] = None,
         scattered: bool = True,
         n_shards: int = 1,
+        layout: Optional[str] = None,
     ) -> None:
         if num_pages & (num_pages - 1):
             raise ValueError("num_pages must be a power of two")
@@ -84,9 +85,17 @@ class PagedKVManager:
             raise ValueError("n_shards must be a power of two >= 1")
         if num_pages % n_shards:
             raise ValueError("num_pages must divide evenly across shards")
+        if layout not in (None, "unpacked", "bunch-packed"):
+            raise ValueError(f"unknown tree layout {layout!r}")
         self.num_pages = num_pages
         self.page_tokens = page_tokens
         self.n_shards = n_shards
+        # Device tree-state layout for the wavefront-backed admission
+        # path (docs/design.md §3).  The host-side NBBSRef trees below
+        # are layout-independent; this knob only shapes what
+        # `device_pool_config()` exports, so handles — (shard, page id)
+        # pairs — and the whole public API are unchanged.
+        self.layout = layout or "unpacked"
         self.pages_per_shard = num_pages // n_shards
         self.max_run_pages = min(
             max_run_pages or num_pages, self.pages_per_shard
@@ -110,6 +119,27 @@ class PagedKVManager:
         """The single tree of an unsharded pool (back-compat accessor)."""
         assert self.n_shards == 1, "sharded pool: use .buddies[s]"
         return self.buddies[0]
+
+    def device_pool_config(self):
+        """The device-side `core.pool.PoolConfig` mirroring this pool's
+        geometry: S shards of a depth-log2(pages_per_shard) tree, one
+        allocation unit per page, with the configured tree-state layout
+        (`layout="bunch-packed"` gives the §III-D packed words — ~1/7
+        the VMEM words, ~B x fewer climb writes; see `core/layout.py`).
+        Burst admission through `core.nbbs_jax.nb_pool_alloc` /
+        `kernels.ops.nbbs_pool_wavefront_step` on this config produces
+        the same (shard, page) handles this host manager hands out."""
+        from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
+        from repro.core.pool import PoolConfig
+
+        tree = TreeConfig(
+            depth=_ilog2(self.pages_per_shard),
+            max_level=_ilog2(self.pages_per_shard // self.max_run_pages),
+            layout=(
+                BUNCH_PACKED if self.layout == "bunch-packed" else UNPACKED
+            ),
+        )
+        return PoolConfig(tree, self.n_shards)
 
     # ------------------------------------------------------------------
     def home_shard(self, seq_id: int) -> int:

@@ -62,7 +62,7 @@ def apply_moe(
     at train_4k scale); the einsum formulation replaces them with MXU
     matmuls whose collective footprint is just the [G,E,C,d] buffer
     reshard — trading ~2x small matmul flops for the dominant
-    collective term (EXPERIMENTS.md §Perf, llama4/phi3.5 cells).
+    collective term (docs/experiments.md §Perf, llama4/phi3.5 cells).
     """
     if dispatch == "einsum":
         return _apply_moe_einsum(

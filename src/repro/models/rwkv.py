@@ -10,7 +10,7 @@ Channel-mix is the squared-relu two-layer MLP with token shift.
 
 Training runs lax.scan over time on the [B, H, P, P] state (the
 recurrence is inherently sequential in its data-dependent decay; a
-chunked parallel form is a §Perf candidate, see EXPERIMENTS.md).
+chunked parallel form is a §Perf candidate, see docs/experiments.md).
 Decode carries {token-shift xs, wkv state} — O(1) per token, which is
 what long_500k exercises.
 """

@@ -14,7 +14,7 @@ full [S, S] matrix nor a materialized [S, H, P, N] state history.
 
 Decode is the O(1) recurrence on the carried state — this is what makes
 long_500k a constant-memory decode for the hybrid/ssm architectures
-(DESIGN.md §5).
+(docs/design.md §5).
 """
 
 from __future__ import annotations

@@ -353,7 +353,7 @@ def decode_step(
                 # Dispatch is always the scatter path at decode: with
                 # T = batch tokens the one-hot matmuls of the einsum
                 # mode cost more than the tiny scatter (measured:
-                # EXPERIMENTS.md §Perf generalization table).
+                # docs/experiments.md §Perf generalization table).
                 h, _ = moe_lib.apply_moe(
                     lp["moe"],
                     h,

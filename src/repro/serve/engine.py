@@ -51,10 +51,11 @@ class ServeEngine:
         dtype=jnp.float32,
         impl: str = "auto",
         n_shards: int = 1,
+        layout: Optional[str] = None,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
             "paged engine covers attention families; SSM/hybrid use "
-            "fixed-size state slots (see DESIGN.md §5)"
+            "fixed-size state slots (see docs/design.md §5)"
         )
         self.cfg = cfg
         self.params = params
@@ -66,7 +67,12 @@ class ServeEngine:
         # n_shards > 1 splits the page pool across replicated buddy
         # trees (home-shard hashing + overflow probing; one release
         # burst per shard when sequences retire — see memory/kv_cache).
-        self.kv = PagedKVManager(num_pages, page_tokens, n_shards=n_shards)
+        # `layout` picks the device tree-state format for wavefront-
+        # backed admission ("bunch-packed" = the §III-D packed words,
+        # docs/design.md §3); handles and the engine API are unchanged.
+        self.kv = PagedKVManager(
+            num_pages, page_tokens, n_shards=n_shards, layout=layout
+        )
         self.pool = init_pool(cfg, num_pages, page_tokens, dtype)
         self.max_pages = num_pages
         self.running: Dict[int, Request] = {}

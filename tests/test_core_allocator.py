@@ -11,7 +11,9 @@ from repro.core.baselines import FreeListBuddy, SpinlockTreeBuddy
 from repro.core.bits import BUSY, OCC, is_free
 from repro.core.bunch import BunchBuddy
 from repro.core.concurrent import (
+    BUNCH_PACKED,
     TreeConfig,
+    UNPACKED,
     free_batch,
     free_batch_sequential,
     free_round,
@@ -22,6 +24,13 @@ from repro.core.concurrent import (
 )
 from repro.core.nbbs_jax import init_state, nb_alloc, nb_free, nb_free_batch
 from repro.core.ref import NBBSRef
+
+# Both persistent tree-state layouts (docs/design.md §3): every
+# layout-agnostic wavefront test runs on each, and the dedicated
+# differential class below holds them outcome-identical.
+LAYOUTS = pytest.mark.parametrize(
+    "layout", [UNPACKED, BUNCH_PACKED], ids=["unpacked", "packed"]
+)
 
 
 class TestRef:
@@ -146,8 +155,9 @@ class TestBaselines:
 
 
 class TestWavefront:
-    def test_single_round_parallel_alloc(self):
-        cfg = TreeConfig(depth=7, max_level=0)
+    @LAYOUTS
+    def test_single_round_parallel_alloc(self, layout):
+        cfg = TreeConfig(depth=7, max_level=0, layout=layout)
         tree, nodes, ok, stats = wavefront_alloc(
             cfg, cfg.empty_tree(), jnp.full(16, 7, jnp.int32),
             jnp.ones(16, bool),
@@ -179,8 +189,9 @@ class TestWavefront:
         # lose to the lower-id unit request, then find no free root
         assert [bool(x) for x in ok] == [True, False, True, True]
 
-    def test_free_batch_roundtrip(self):
-        cfg = TreeConfig(depth=6, max_level=0)
+    @LAYOUTS
+    def test_free_batch_roundtrip(self, layout):
+        cfg = TreeConfig(depth=6, max_level=0, layout=layout)
         tree, nodes, ok, _ = wavefront_alloc(
             cfg, cfg.empty_tree(), jnp.full(8, 3, jnp.int32),
             jnp.ones(8, bool),
@@ -238,8 +249,9 @@ class TestWavefront:
         assert (np.asarray(tree) == 0).all()
         assert int(stats["merged_writes"]) < int(stats["logical_rmws"])
 
-    def test_double_free_is_dropped(self):
-        cfg = TreeConfig(depth=5, max_level=0)
+    @LAYOUTS
+    def test_double_free_is_dropped(self, layout):
+        cfg = TreeConfig(depth=5, max_level=0, layout=layout)
         tree, nodes, ok, _ = wavefront_alloc(
             cfg, cfg.empty_tree(), jnp.asarray([3, 4], jnp.int32),
             jnp.ones(2, bool),
@@ -354,8 +366,9 @@ class TestWavefront:
         lev = levels_from_sizes(cfg, 128, jnp.array([1, 2, 3, 128, 64, 0]))
         assert np.asarray(lev).tolist() == [7, 6, 5, 0, 1, 7]
 
-    def test_exhaustion_reports_failure(self):
-        cfg = TreeConfig(depth=3, max_level=0)
+    @LAYOUTS
+    def test_exhaustion_reports_failure(self, layout):
+        cfg = TreeConfig(depth=3, max_level=0, layout=layout)
         levels = jnp.full(10, 3, jnp.int32)  # 10 requests, 8 units
         _, nodes, ok, _ = wavefront_alloc(
             cfg, cfg.empty_tree(), levels, jnp.ones(10, bool)
@@ -385,3 +398,151 @@ class TestSingleOpJax:
                     assert bool(ok) and int(off) == a
                     live.append((int(off), lv))
             assert (np.asarray(st.tree) == np.array(ref.tree)).all()
+
+
+class TestTreeLayouts:
+    """`BunchPacked` vs the `Unpacked` oracle (docs/design.md §3):
+    outcome-identical on valid traces, ~7x smaller persistent state,
+    strictly fewer merged climb writes."""
+
+    def test_packed_state_word_budget(self):
+        """Bottom-aligned B=3 layering keeps the packed word count at
+        ~1/7 of unpacked — and always within the 1/4 budget."""
+        for depth in range(3, 15):
+            cu = TreeConfig(depth=depth)
+            cp = TreeConfig(depth=depth, layout=BUNCH_PACKED)
+            assert cp.n_state_words * 4 <= cu.n_state_words
+            # and the packed tree still addresses every node
+            assert cp.n_words == cu.n_words
+        # the asymptotic ratio: 4 leaves/word + higher layers ~ 1/7
+        cu, cp = TreeConfig(depth=14), TreeConfig(depth=14, layout=BUNCH_PACKED)
+        assert cp.n_state_words / cu.n_state_words < 0.15
+
+    def test_packed_equals_unpacked_on_mixed_traces(self):
+        """Replayed mixed alloc/free wavefronts: identical nodes, ok
+        masks, and freed masks at every step, and both drain to zero."""
+        for seed, depth in [(0, 6), (1, 8), (2, 9)]:
+            rng = np.random.default_rng(seed)
+            cu = TreeConfig(depth=depth, max_level=0)
+            cp = TreeConfig(depth=depth, max_level=0, layout=BUNCH_PACKED)
+            tu, tp = cu.empty_tree(), cp.empty_tree()
+            live = []
+            for _ in range(12):
+                K = 8
+                lv = jnp.asarray(
+                    rng.integers(1, depth + 1, size=K), jnp.int32
+                )
+                act = jnp.asarray(rng.random(K) < 0.8)
+                tu, nu, oku, _ = wavefront_alloc(cu, tu, lv, act)
+                tp, np_, okp, _ = wavefront_alloc(cp, tp, lv, act)
+                assert (np.asarray(nu) == np.asarray(np_)).all()
+                assert (np.asarray(oku) == np.asarray(okp)).all()
+                live += [
+                    int(n)
+                    for n, o in zip(np.asarray(nu), np.asarray(oku))
+                    if o
+                ]
+                k = int(rng.integers(0, len(live) + 1))
+                if not k:
+                    continue
+                idx = rng.choice(len(live), size=k, replace=False)
+                sel = [live[i] for i in idx]
+                live = [
+                    n for i, n in enumerate(live)
+                    if i not in set(idx.tolist())
+                ]
+                fn = jnp.asarray(sel, jnp.int32)
+                fa = jnp.ones(k, bool)
+                tu, fu, _ = wavefront_free(cu, tu, fn, fa)
+                tp, fp, _ = wavefront_free(cp, tp, fn, fa)
+                assert (np.asarray(fu) == np.asarray(fp)).all()
+            if live:
+                fn = jnp.asarray(live, jnp.int32)
+                fa = jnp.ones(len(live), bool)
+                tu, _, _ = wavefront_free(cu, tu, fn, fa)
+                tp, _, _ = wavefront_free(cp, tp, fn, fa)
+            assert (np.asarray(tu) == 0).all()
+            assert (np.asarray(tp) == 0).all()
+
+    def test_packed_single_op_matches_ref_addresses(self):
+        """The in-graph single-op API over the packed layout replays the
+        sequential specification's addresses (nbbs_jax with
+        layout=BUNCH_PACKED vs NBBSRef)."""
+        cfg = TreeConfig(depth=6, max_level=0, layout=BUNCH_PACKED)
+        st = init_state(cfg)
+        ref = NBBSRef(64, 1)
+        random.seed(3)
+        live = []
+        for _ in range(150):
+            if live and random.random() < 0.5:
+                off = live.pop(random.randrange(len(live)))
+                st = nb_free(cfg, st, jnp.int32(off))
+                ref.nb_free(off)
+            else:
+                lv = random.choice([6, 6, 5, 4, 2])
+                st, off, ok = nb_alloc(cfg, st, jnp.int32(lv))
+                a = ref.nb_alloc(64 >> lv)
+                if a is None:
+                    assert not bool(ok)
+                else:
+                    assert bool(ok) and int(off) == a
+                    live.append(int(off))
+        for off in live:
+            ref.nb_free(off)
+        st, freed = nb_free_batch(
+            cfg, st, jnp.asarray(live or [0], jnp.int32),
+            jnp.asarray([bool(live)] * max(len(live), 1)),
+        )
+        assert (np.asarray(st.tree) == 0).all()
+        assert ref.free_bytes() == 64
+
+    def test_packed_merged_climb_writes_below_unpacked(self):
+        """The §III-D payoff: the same burst costs strictly fewer packed
+        word updates than unpacked word updates, alloc and free side."""
+        rng = np.random.default_rng(5)
+        depth, K = 10, 64
+        cu = TreeConfig(depth=depth, max_level=0)
+        cp = TreeConfig(depth=depth, max_level=0, layout=BUNCH_PACKED)
+        lv = jnp.asarray(rng.integers(4, depth + 1, size=K), jnp.int32)
+        tu, nu, oku, su = wavefront_alloc(
+            cu, cu.empty_tree(), lv, jnp.ones(K, bool)
+        )
+        tp, np_, okp, sp = wavefront_alloc(
+            cp, cp.empty_tree(), lv, jnp.ones(K, bool)
+        )
+        assert int(sp["merged_writes"]) < int(su["merged_writes"])
+        # identical logical baseline semantics: packed logical counts
+        # per-bunch RMWs, so it is smaller too (the paper's ~B x claim)
+        assert int(sp["logical_rmws"]) < int(su["logical_rmws"])
+        tu, fu, fsu = wavefront_free(cu, tu, nu, oku)
+        tp, fp, fsp = wavefront_free(cp, tp, np_, okp)
+        assert int(fsp["merged_writes"]) < int(fsu["merged_writes"])
+
+
+class TestJunkHandles:
+    @LAYOUTS
+    def test_out_of_range_handle_is_dropped(self, layout):
+        """A node id >= n_words is a junk handle and must be dropped,
+        never aliased to the clamped last leaf."""
+        cfg = TreeConfig(depth=3, max_level=0, layout=layout)
+        K = 8
+        tree, nodes, ok, _ = wavefront_alloc(
+            cfg, cfg.empty_tree(), jnp.full(K, 3, jnp.int32),
+            jnp.ones(K, bool),
+        )
+        assert bool(ok.all())
+        junk = jnp.asarray([cfg.n_words + 984, cfg.n_words - 1 + 16,
+                            -5], jnp.int32)
+        t2, freed, _ = wavefront_free(cfg, tree, junk, jnp.ones(3, bool))
+        assert not bool(freed.any())
+        assert (np.asarray(t2) == np.asarray(tree)).all()
+
+    def test_sequential_scan_rejects_packed_layout(self):
+        """The faithful per-word scan replays unpacked bit ops and must
+        refuse packed state instead of corrupting it."""
+        cfg = TreeConfig(depth=6, max_level=0, layout=BUNCH_PACKED)
+        with pytest.raises(ValueError):
+            free_batch_sequential(
+                cfg, cfg.empty_tree(), jnp.asarray([64], jnp.int32),
+                jnp.ones(1, bool),
+            )

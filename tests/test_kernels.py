@@ -6,7 +6,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.concurrent import TreeConfig, wavefront_alloc, wavefront_step
+from repro.core.concurrent import (
+    BUNCH_PACKED,
+    TreeConfig,
+    UNPACKED,
+    wavefront_alloc,
+    wavefront_step,
+)
+
+_LAYOUTS = {"unpacked": UNPACKED, "packed": BUNCH_PACKED}
 from repro.core.pool import PoolConfig
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.nbbs_alloc import wavefront_alloc_pallas, wavefront_step_pallas
@@ -133,11 +141,13 @@ class TestPagedAttention:
 
 
 class TestNBBSKernel:
-    @pytest.mark.parametrize("depth,K,seed", [
-        (6, 16, 0), (9, 64, 1), (8, 33, 2), (10, 128, 3),
+    @pytest.mark.parametrize("depth,K,seed,layout", [
+        (6, 16, 0, "unpacked"), (9, 64, 1, "unpacked"),
+        (8, 33, 2, "packed"), (10, 128, 3, "unpacked"),
+        (6, 16, 4, "packed"),
     ])
-    def test_matches_jnp_wavefront(self, depth, K, seed):
-        cfg = TreeConfig(depth=depth, max_level=0)
+    def test_matches_jnp_wavefront(self, depth, K, seed, layout):
+        cfg = TreeConfig(depth=depth, max_level=0, layout=_LAYOUTS[layout])
         rng = np.random.default_rng(seed)
         levels = jnp.asarray(
             rng.integers(2, depth + 1, size=K), jnp.int32
@@ -175,13 +185,15 @@ class TestNBBSKernel:
         assert (np.asarray(t1) == np.asarray(t2)).all()
         assert int(s1["rounds"]) == int(s2["rounds"])
 
-    @pytest.mark.parametrize("depth,K,F,seed", [
-        (6, 16, 8, 0), (8, 33, 16, 1), (9, 64, 64, 2),
+    @pytest.mark.parametrize("depth,K,F,seed,layout", [
+        (6, 16, 8, 0, "unpacked"), (8, 33, 16, 1, "unpacked"),
+        (9, 64, 64, 2, "unpacked"), (7, 24, 12, 3, "packed"),
     ])
-    def test_mixed_step_matches_jnp(self, depth, K, F, seed):
-        """Kernel mixed alloc+free rounds (tree VMEM-resident for the
-        whole step) vs the jnp wavefront_step oracle."""
-        cfg = TreeConfig(depth=depth, max_level=0)
+    def test_mixed_step_matches_jnp(self, depth, K, F, seed, layout):
+        """Kernel mixed alloc+free rounds (tree state VMEM-resident for
+        the whole step) vs the jnp wavefront_step oracle — both tree
+        layouts (the packed case keeps uint32 bunch words in VMEM)."""
+        cfg = TreeConfig(depth=depth, max_level=0, layout=_LAYOUTS[layout])
         rng = np.random.default_rng(seed)
         # fragment first so frees exercise real coalescing
         tree, nodes, ok, _ = wavefront_alloc(
@@ -243,12 +255,15 @@ class TestPooledNBBSKernel:
         assert (np.asarray(n1) == np.asarray(n2)).all()
         assert not np.asarray(sh2).any()
 
-    @pytest.mark.parametrize("S,depth,K,seed", [(2, 6, 16, 0), (4, 5, 20, 1)])
-    def test_no_overflow_matches_reference_pool(self, S, depth, K, seed):
+    @pytest.mark.parametrize("S,depth,K,seed,layout", [
+        (2, 6, 16, 0, "unpacked"), (4, 5, 20, 1, "unpacked"),
+        (2, 6, 16, 2, "packed"),
+    ])
+    def test_no_overflow_matches_reference_pool(self, S, depth, K, seed, layout):
         """Without overflow the attempt-granular kernel linearization is
         the same linearization as the lockstep in-graph router, so the
-        results must be bit-identical."""
-        pcfg = PoolConfig(TreeConfig(depth=depth), S)
+        results must be bit-identical (both tree layouts)."""
+        pcfg = PoolConfig(TreeConfig(depth=depth, layout=_LAYOUTS[layout]), S)
         rng = np.random.default_rng(seed)
         # ample capacity: mid-to-leaf levels, no shard can exhaust
         levels = jnp.asarray(

@@ -7,10 +7,16 @@ import numpy as np
 import pytest
 
 from repro.core.concurrent import (
+    BUNCH_PACKED,
     TreeConfig,
+    UNPACKED,
     free_batch_sequential,
     wavefront_alloc,
     wavefront_step,
+)
+
+LAYOUTS = pytest.mark.parametrize(
+    "layout", [UNPACKED, BUNCH_PACKED], ids=["unpacked", "packed"]
 )
 from repro.core.nbbs_jax import (
     init_pool_state,
@@ -32,8 +38,9 @@ class TestPoolSingleShardIdentity:
     """With S=1 every pool entry point must be bit-identical to its
     single-tree counterpart (the acceptance bar for the refactor)."""
 
-    def test_alloc_bit_identical(self):
-        cfg = TreeConfig(depth=7, max_level=0)
+    @LAYOUTS
+    def test_alloc_bit_identical(self, layout):
+        cfg = TreeConfig(depth=7, max_level=0, layout=layout)
         pcfg = PoolConfig(cfg, 1)
         rng = np.random.default_rng(0)
         lv = jnp.asarray(rng.integers(2, 8, size=24), jnp.int32)
@@ -234,3 +241,46 @@ class TestPoolStateAPI:
 # The hypothesis property for overflow routing (a pool trace never
 # double-allocates a (shard, node) pair) lives in tests/test_properties.py
 # with the other hypothesis suites so this module stays dependency-free.
+
+
+class TestPoolLayouts:
+    """The packed tree-state layout through the pool layer: identical
+    routing and allocation outcomes to the unpacked pool, smaller
+    stacked state (docs/design.md §3)."""
+
+    def test_packed_pool_equals_unpacked_pool(self):
+        S, depth, K = 4, 5, 24
+        pu = PoolConfig(TreeConfig(depth=depth), S)
+        pp = PoolConfig(TreeConfig(depth=depth, layout=BUNCH_PACKED), S)
+        assert pp.n_state_words * 4 <= pu.n_state_words
+        rng = np.random.default_rng(9)
+        lv = jnp.asarray(rng.integers(0, depth + 1, size=K), jnp.int32)
+        lane_ids = jnp.asarray(rng.integers(0, 1000, size=K), jnp.int32)
+        tu, nu, su, oku, stu = pool_wavefront_alloc(
+            pu, pu.empty_trees(), lv, jnp.ones(K, bool), 64, lane_ids
+        )
+        tp, np_, sp, okp, stp = pool_wavefront_alloc(
+            pp, pp.empty_trees(), lv, jnp.ones(K, bool), 64, lane_ids
+        )
+        assert (np.asarray(nu) == np.asarray(np_)).all()
+        assert (np.asarray(su) == np.asarray(sp)).all()
+        assert (np.asarray(oku) == np.asarray(okp)).all()
+        assert int(stu["rounds"]) == int(stp["rounds"])
+        assert int(stu["overflows"]) == int(stp["overflows"])
+        # the packed pool's merged writes are the §III-D payoff
+        assert int(stp["merged_writes"]) < int(stu["merged_writes"])
+        # release: identical freed masks, both pools drain to zero
+        tu, fu, _ = pool_wavefront_free(pu, tu, nu, su, oku)
+        tp, fp, _ = pool_wavefront_free(pp, tp, np_, sp, okp)
+        assert (np.asarray(fu) == np.asarray(fp)).all()
+        assert (np.asarray(tu) == 0).all()
+        assert (np.asarray(tp) == 0).all()
+
+    def test_packed_pool_state_shapes(self):
+        pp = PoolConfig(TreeConfig(depth=6, layout=BUNCH_PACKED), 2)
+        trees = pp.empty_trees()
+        assert trees.shape == (2, pp.n_state_words)
+        assert trees.dtype == jnp.uint32
+        st = init_pool_state(pp)
+        assert st.trees.shape == (2, pp.n_state_words)
+        assert st.index.shape == (2, 64)

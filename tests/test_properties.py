@@ -19,10 +19,12 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bunch import BunchBuddy  # noqa: E402
 from repro.core.concurrent import (  # noqa: E402
+    BUNCH_PACKED,
     TreeConfig,
     free_batch,
     free_batch_sequential,
     wavefront_alloc,
+    wavefront_free,
     wavefront_step,
 )
 from repro.core.pool import (  # noqa: E402
@@ -329,3 +331,59 @@ def test_wavefront_matches_ref_single_requests(ops):
                 assert bool(ok[0])
                 live.append(int(nodes[0]))
         assert (np.asarray(tree) == np.array(ref.tree)).all()
+
+
+@given(op_stream(40))
+@settings(max_examples=15, deadline=None)
+def test_device_layouts_and_bunch_buddy_agree_on_any_trace(ops):
+    """Three-way layout equivalence on arbitrary mixed alloc/free
+    traces (docs/design.md §3): the `BunchPacked` device layout, the
+    `Unpacked` oracle, and the host `BunchBuddy(B=3, word_bits=32)`
+    hand out identical addresses and end at identical occupancy."""
+    depth = 7                       # 128 units of 8 bytes = 1024 total
+    total, min_size = 1024, 8
+    cu = TreeConfig(depth=depth, max_level=0)
+    cp = TreeConfig(depth=depth, max_level=0, layout=BUNCH_PACKED)
+    tu, tp = cu.empty_tree(), cp.empty_tree()
+    bb = BunchBuddy(total, min_size, bunch_levels=3, word_bits=32)
+    sizes = [8, 8, 16, 32, 64, 256, 1024]
+    live = []                       # (node, addr, block_size)
+    for is_alloc, r in ops:
+        if not is_alloc and live:
+            node, addr, _ = live.pop(r % len(live))
+            fn, fa = jnp.asarray([node], jnp.int32), jnp.ones(1, bool)
+            tu, fu, _ = wavefront_free(cu, tu, fn, fa)
+            tp, fp, _ = wavefront_free(cp, tp, fn, fa)
+            assert bool(fu[0]) and bool(fp[0])
+            bb.nb_free(addr)
+        else:
+            size = sizes[r % len(sizes)]
+            lv = depth - ((size // min_size) - 1).bit_length()
+            lvj = jnp.asarray([lv], jnp.int32)
+            tu, nu, oku, _ = wavefront_alloc(cu, tu, lvj, jnp.ones(1, bool))
+            tp, np_, okp, _ = wavefront_alloc(cp, tp, lvj, jnp.ones(1, bool))
+            a_bb = bb.nb_alloc(size)
+            assert bool(oku[0]) == bool(okp[0]) == (a_bb is not None)
+            if a_bb is not None:
+                node = int(nu[0])
+                assert node == int(np_[0])
+                level = node.bit_length() - 1
+                addr = (node - (1 << level)) * (total >> level)
+                assert addr == a_bb
+                live.append((node, addr, size))
+    # final occupancy: identical free bytes, and a full drain returns
+    # every structure to empty
+    occupied = sum(
+        (total >> (n.bit_length() - 1)) for n, _, _ in live
+    )
+    assert bb.free_bytes() == total - occupied
+    for node, addr, _ in live:
+        bb.nb_free(addr)
+    if live:
+        fn = jnp.asarray([n for n, _, _ in live], jnp.int32)
+        fa = jnp.ones(len(live), bool)
+        tu, _, _ = wavefront_free(cu, tu, fn, fa)
+        tp, _, _ = wavefront_free(cp, tp, fn, fa)
+    assert (np.asarray(tu) == 0).all()
+    assert (np.asarray(tp) == 0).all()
+    assert bb.free_bytes() == total

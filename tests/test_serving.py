@@ -313,3 +313,53 @@ class TestMoEServing:
         eng.submit(Request(0, rng.integers(0, 200, 5).astype(np.int32), 3))
         eng.run_to_completion()
         assert len(eng.completed) == 1
+
+
+class TestLayoutKnob:
+    """The tree-layout knob on the serving stack (docs/design.md §3):
+    handles and the public API are unchanged — only the exported device
+    pool config's state format differs."""
+
+    def test_kv_manager_exports_device_pool_config(self):
+        from repro.core.layout import BunchPacked, Unpacked
+
+        kv = PagedKVManager(256, 16, n_shards=4)
+        pcfg = kv.device_pool_config()
+        assert isinstance(pcfg.tree.layout, Unpacked)
+        assert pcfg.n_shards == 4
+        assert pcfg.total_units == 256  # one unit per page
+
+        kvp = PagedKVManager(256, 16, n_shards=4, layout="bunch-packed")
+        pp = kvp.device_pool_config()
+        assert isinstance(pp.tree.layout, BunchPacked)
+        assert pp.tree.depth == pcfg.tree.depth
+        assert pp.n_state_words * 4 <= pcfg.n_state_words
+        # identical host behaviour: the knob never leaks into handles
+        assert kvp.add_sequence(1, 64)
+        assert kv.add_sequence(1, 64)
+        assert kv.seqs[1].runs == kvp.seqs[1].runs
+
+    def test_kv_manager_rejects_unknown_layout(self):
+        with pytest.raises(ValueError):
+            PagedKVManager(64, 16, layout="zip-packed")
+
+    def test_device_admission_on_exported_config_matches_host(self):
+        """Burst admission through the exported packed config returns
+        the same (shard, page) handles as the unpacked one."""
+        from repro.core.pool import pool_wavefront_alloc
+
+        kv_u = PagedKVManager(128, 16, n_shards=2)
+        kv_p = PagedKVManager(128, 16, n_shards=2, layout="bunch-packed")
+        pu, pp = kv_u.device_pool_config(), kv_p.device_pool_config()
+        K = 8
+        lv = jnp.full(K, pu.tree.depth - 1, jnp.int32)  # 2-page runs
+        ids = jnp.arange(K, dtype=jnp.int32)
+        tu, nu, su, oku, _ = pool_wavefront_alloc(
+            pu, pu.empty_trees(), lv, jnp.ones(K, bool), 64, ids
+        )
+        tp, np_, sp, okp, _ = pool_wavefront_alloc(
+            pp, pp.empty_trees(), lv, jnp.ones(K, bool), 64, ids
+        )
+        assert (np.asarray(nu) == np.asarray(np_)).all()
+        assert (np.asarray(su) == np.asarray(sp)).all()
+        assert bool(oku.all()) and bool(okp.all())

@@ -6,6 +6,14 @@ every relative link resolves to an existing file, and that every
 intra-file anchor (#heading) matches a heading slug in the target.
 External (http/https/mailto) links are not fetched — only shape-checked.
 
+Also scans the source trees (src/, tests/, benchmarks/, tools/,
+examples/) for doc-file *citations* — `docs/design.md §3`,
+`docs/architecture.md`, bare `DESIGN.md` — and fails when the cited
+file does not exist (dangling citations rot silently: this repo once
+carried a dozen references to a DESIGN.md that was never written).
+When a citation carries a §N section marker, the target doc must
+contain that `§N` literally.
+
 Exit code 0 = all links resolve; 1 = at least one broken link (listed).
 """
 
@@ -17,6 +25,9 @@ from pathlib import Path
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# doc citations in source: "docs/design.md §3", "README.md", "FOO.md §2"
+CITATION_RE = re.compile(r"([A-Za-z0-9_][A-Za-z0-9_./-]*\.md)(?:\s*(§\d+))?")
+SOURCE_DIRS = ("src", "tests", "benchmarks", "tools", "examples")
 
 
 def slugify(heading: str) -> str:
@@ -51,6 +62,45 @@ def check_file(md: Path, root: Path) -> list:
     return errors
 
 
+def check_source_citations(root: Path) -> list:
+    """Every `<file>.md [§N]` citation in a source file must name a doc
+    that exists (resolved against the repo root), and its §N section —
+    when cited — must appear in that doc."""
+    errors = []
+    section_cache: dict = {}
+    for d in SOURCE_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            if py.resolve() == Path(__file__).resolve():
+                continue  # this file's docstring shows example citations
+            text = py.read_text()
+            for m in CITATION_RE.finditer(text):
+                target, section = m.group(1), m.group(2)
+                dest = root / target
+                rel = py.relative_to(root)
+                line = text.count("\n", 0, m.start()) + 1
+                if not dest.exists():
+                    errors.append(
+                        f"{rel}:{line}: citation of nonexistent doc "
+                        f"-> {target}"
+                    )
+                    continue
+                if section:
+                    if dest not in section_cache:
+                        # exact section tokens, so §1 never matches §10
+                        section_cache[dest] = set(
+                            re.findall(r"§\d+", dest.read_text())
+                        )
+                    if section not in section_cache[dest]:
+                        errors.append(
+                            f"{rel}:{line}: {target} has no section "
+                            f"{section}"
+                        )
+    return errors
+
+
 def main() -> int:
     root = Path(__file__).resolve().parent.parent
     docs = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
@@ -61,9 +111,10 @@ def main() -> int:
     errors = []
     for md in docs:
         errors.extend(check_file(md, root))
+    errors.extend(check_source_citations(root))
     for e in errors:
         print(e, file=sys.stderr)
-    print(f"checked {len(docs)} files: "
+    print(f"checked {len(docs)} files + source citations: "
           f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
     return 1 if errors else 0
 
