@@ -1,38 +1,53 @@
 """Serving integration benchmark (beyond-paper): continuous batching on
 NBBS-paged KV memory — tokens/s, admission behaviour and fragmentation
 under request churn, versus a fixed-slot (no-buddy) pool baseline that
-must reserve worst-case contiguous slots per sequence."""
+must reserve worst-case contiguous slots per sequence.
+
+Requests come from the shared seeded generator
+(`benchmarks.common.poisson_traffic`) so this bench and
+`bench_serve_traffic` replay the same workload family; here the queue
+is pre-loaded (arrival times ignored) because the host engine is the
+only consumer.  `BENCH_FAST=1` shrinks the run for the CI smoke job.
+"""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import poisson_traffic, row, traffic_prompt_tokens
 from repro.configs import get_config
 from repro.memory.kv_cache import PagedKVManager
 from repro.models import init_params
 from repro.serve.engine import Request, ServeEngine
 
+FAST = os.environ.get("BENCH_FAST") == "1"
+
+N_REQ = 8 if FAST else 24
+N_CHURN = 200 if FAST else 2_000
+SEED = 0
+
 
 def run() -> None:
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(SEED)
 
     eng = ServeEngine(
         cfg, params, num_pages=128, page_tokens=4, max_batch=8,
         dtype=jnp.float32,
     )
-    n_req = 24
-    for i in range(n_req):
-        plen = int(rng.integers(2, 14))
+    trace = poisson_traffic(
+        SEED, N_REQ, prompt_buckets=(2, 4, 8), out_range=(2, 8),
+    )
+    for t in trace:
         eng.submit(Request(
-            i, rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            max_new_tokens=int(rng.integers(2, 10)),
+            t.req_id, traffic_prompt_tokens(t, cfg.vocab_size, rng),
+            max_new_tokens=t.max_new,
         ))
     t0 = time.perf_counter()
     eng.run_to_completion()
@@ -48,7 +63,7 @@ def run() -> None:
     t0 = time.perf_counter()
     admitted = failed = 0
     live = []
-    for i in range(2_000):
+    for i in range(N_CHURN):
         if live and rng.random() < 0.5:
             kv.free_sequence(live.pop(int(rng.integers(len(live)))))
         else:
@@ -59,7 +74,7 @@ def run() -> None:
             else:
                 failed += 1
     dt = time.perf_counter() - t0
-    row("paged_churn", "nbbs-buddy-pool", 1, 2_000, dt,
+    row("paged_churn", "nbbs-buddy-pool", 1, N_CHURN, dt,
         extra=f"admitted={admitted};rejected={failed};"
               f"frag={kv.fragmentation()['largest_run']}")
 
@@ -71,7 +86,7 @@ def run() -> None:
     live2 = []
     admitted2 = failed2 = 0
     t0 = time.perf_counter()
-    for i in range(2_000):
+    for i in range(N_CHURN):
         if live2 and rng.random() < 0.5:
             free_slots.append(live2.pop(int(rng.integers(len(live2)))))
         else:
@@ -81,7 +96,7 @@ def run() -> None:
             else:
                 failed2 += 1
     dt = time.perf_counter() - t0
-    row("paged_churn", "fixed-slot-pool", 1, 2_000, dt,
+    row("paged_churn", "fixed-slot-pool", 1, N_CHURN, dt,
         extra=f"admitted={admitted2};rejected={failed2}")
 
 

@@ -10,10 +10,11 @@ rounds.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
-from typing import Callable, Iterable, List
+from typing import Callable, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +107,80 @@ def make_host_allocators(total_memory: int, min_size: int):
         "4lvl-nb-seq": BunchBuddy(total_memory, min_size, bunch_levels=4,
                                   word_bits=64),
         "list-buddy-sl": FreeListBuddy(total_memory, min_size),  # Linux-style
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared serving-traffic generator (bench_paged_serving + bench_serve_traffic)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficRequest:
+    """One synthetic serving request in step-time."""
+
+    req_id: int
+    arrival_step: int  # decode-step index at which the request arrives
+    prompt_len: int
+    max_new: int
+
+
+def poisson_traffic(
+    seed: int,
+    n_requests: int,
+    *,
+    rate_per_step: float = 2.0,
+    prompt_buckets: Sequence[int] = (2, 4, 8, 16, 32),
+    prompt_weights: Optional[Sequence[float]] = None,
+    out_range: tuple = (2, 32),
+    out_mean: float = 8.0,
+) -> List[TrafficRequest]:
+    """Seeded request synthesis shared by the serving benchmarks.
+
+    Arrivals are Poisson in *decode-step time* (exponential inter-
+    arrival gaps of mean 1/rate), so the same trace drives engines of
+    different wall-clock speed identically and latency is measured in
+    steps.  Lengths are mixed the way serving traffic is:
+
+      * prompts: a bucketed distribution skewed toward short
+        interactive turns with a long-document tail (power-of-two
+        buckets, so prefill compiles stay bounded for every engine);
+      * outputs: geometric (many short answers, occasional rambles),
+        clipped to `out_range`.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_step, size=n_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
+    if prompt_weights is None:
+        # short-turn heavy, monotone tail over the buckets
+        w = np.asarray([2.0 ** -i for i in range(len(prompt_buckets))])
+    else:
+        w = np.asarray(prompt_weights, float)
+    w = w / w.sum()
+    prompts = rng.choice(np.asarray(prompt_buckets), size=n_requests, p=w)
+    lo, hi = out_range
+    outs = np.clip(rng.geometric(min(1.0, 1.0 / out_mean), n_requests), lo, hi)
+    return [
+        TrafficRequest(i, int(arrivals[i]), int(prompts[i]), int(outs[i]))
+        for i in range(n_requests)
+    ]
+
+
+def traffic_prompt_tokens(
+    tr: TrafficRequest, vocab_size: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Deterministic-given-rng token fill for a synthetic request."""
+    return rng.integers(0, vocab_size, size=tr.prompt_len).astype(np.int32)
+
+
+def quantiles_steps(latencies: Sequence[int]) -> dict:
+    """p50/p99 over integer step latencies (empty-safe)."""
+    if not latencies:
+        return {"p50": None, "p99": None}
+    arr = np.asarray(sorted(latencies), float)
+    return {
+        "p50": float(np.percentile(arr, 50)),
+        "p99": float(np.percentile(arr, 99)),
     }
 
 

@@ -6,6 +6,11 @@ A burst of variable-length requests hits one shared page pool; the buddy
 system handles admission control, page placement (contiguous buddy runs),
 and coalescing on completion — while the model decodes all running
 sequences together through the paged-attention path.
+
+Two engines run the same burst: the host-loop `ServeEngine` (readable
+baseline — numpy tables, one host sync per token) and the jit-resident
+`JitServeEngine` (page alloc, paged attention, sampling and retirement
+frees fused into one compiled `engine_step`; docs/design.md §8).
 """
 
 import time
@@ -55,3 +60,30 @@ print(f"pool after completion: used={f['used_pages']} "
       f"{f['largest_run'] == engine.kv.num_pages})")
 for i in sorted(engine.completed)[:3]:
     print(f"  req {i}: generated {engine.completed[i].out_tokens}")
+
+# --- the same burst through the jit-resident engine --------------------
+from repro.serve.jit_engine import JitServeEngine  # noqa: E402
+
+jit_engine = JitServeEngine(
+    cfg, params, num_pages=128, page_tokens=4, max_batch=6,
+    max_lane_pages=8, max_out=16, dtype=jnp.float32,
+)
+rng = np.random.default_rng(0)  # same seed -> same requests
+for i in range(12):
+    plen = int(rng.integers(3, 14))
+    jit_engine.submit(Request(
+        req_id=i,
+        prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+        max_new_tokens=int(rng.integers(3, 9)),
+    ))
+
+t0 = time.perf_counter()
+jit_engine.run_to_completion(chunk=4)  # 4 steps per compiled dispatch
+dt = time.perf_counter() - t0
+toks = sum(len(r.out_tokens) for r in jit_engine.completed.values())
+tot = jit_engine.stat_totals()
+print(f"\njit engine: {len(jit_engine.completed)} requests, {toks} tokens "
+      f"in {dt:.1f}s ({toks/dt:.1f} tok/s, compile included)")
+print(f"  in-graph allocator: {tot['alloc_pages']} pages allocated, "
+      f"{tot['freed_pages']} freed, {tot['merged_writes']} merged tree "
+      f"writes; pool free={jit_engine.device_free_pages()}/128")

@@ -37,7 +37,14 @@ Invariants (deep-linked from docs/architecture.md):
     a released word without OCC identifies the free as stale and it is
     dropped instead of corrupting ancestor marks;
   * pool handles are (shard, unit_offset) pairs; each shard's index[]
-    is private, so a stale handle can never free another shard's node.
+    is private, so a stale handle can never free another shard's node;
+  * *leaf-only pools* (the jit-resident serving engine, docs/design.md
+    §8) need no index[] at all: every allocation is a single unit, so
+    the serving node of offset o is always the leaf 2^depth + o.  The
+    `nb_pool_alloc_pages` / `nb_pool_free_pages` pair below works on the
+    bare `trees` array — that is what lets the engine pytree carry just
+    the `[S, n_state_words]` tree state across steps, with handles
+    living in its page tables.
 """
 
 from __future__ import annotations
@@ -205,3 +212,70 @@ def nb_pool_free_batch(
     )
     # per-shard index[] keeps stale entries (see module invariants)
     return PoolAllocState(trees, state.index), freed
+
+
+# ---------------------------------------------------------------------------
+# Leaf-only pool API (index[]-free; the jit-resident serving engine)
+# ---------------------------------------------------------------------------
+
+
+def nb_pool_alloc_pages(
+    pcfg: PoolConfig,
+    trees: Array,
+    active: Array,
+    lane_ids: Array,
+    max_rounds: int = 64,
+) -> Tuple[Array, Array, Array, Array, dict]:
+    """Allocate one *leaf unit* (one KV page) per active lane, in-graph.
+
+    The burst-allocation primitive of the jitted engine step: every
+    request targets the leaf level, routed by the Fibonacci home-shard
+    hash of `lane_ids` (the sequence ids, so a sequence's pages cluster
+    on its home shard) with the pool's cyclic overflow probing.
+
+    Returns (trees, shard int32[K], unit_offset int32[K], ok bool[K],
+    stats).  The (shard, offset) pair is the page handle; no index[] is
+    needed because a leaf's node is always 2^depth + offset."""
+    K = active.shape[0]
+    levels = jnp.full((K,), pcfg.tree.depth, dtype=jnp.int32)
+    trees, nodes, shard, ok, stats = pool_wavefront_alloc(
+        pcfg, trees, levels, active, max_rounds,
+        lane_ids.astype(jnp.int32),
+    )
+    off = jnp.where(ok, nodes - (1 << pcfg.tree.depth), -1)
+    return trees, shard, off, ok, stats
+
+
+def nb_pool_free_pages(
+    pcfg: PoolConfig,
+    trees: Array,
+    shards: Array,
+    unit_offsets: Array,
+    active: Array,
+) -> Tuple[Array, Array, Array]:
+    """Release a burst of leaf-unit page handles in one vmapped merged
+    pass (one `free_round` per shard) — the in-graph retirement path of
+    the jitted engine.
+
+    Junk handles are dropped, never aliased: offsets or shards outside
+    the pool geometry are masked here, and a stale in-range handle
+    whose leaf lacks OCC is dropped by `free_round`'s validity mask —
+    identical semantics to `nb_pool_free_batch`, minus the index[]
+    lookup that leaf-only pools don't need.
+
+    Returns (trees, freed bool[K], stats)."""
+    shards = shards.astype(jnp.int32)
+    unit_offsets = unit_offsets.astype(jnp.int32)
+    in_range = (
+        (unit_offsets >= 0)
+        & (unit_offsets < (1 << pcfg.tree.depth))
+        & (shards >= 0)
+        & (shards < pcfg.n_shards)
+    )
+    nodes = jnp.where(in_range, (1 << pcfg.tree.depth) + unit_offsets, 0)
+    sh = jnp.where(in_range, shards, 0)
+    trees, merged, logical, freed = pool_free_round(
+        pcfg, trees, nodes, sh, active & in_range
+    )
+    stats = {"free_merged_writes": merged, "free_logical_rmws": logical}
+    return trees, freed, stats

@@ -268,6 +268,48 @@ def pool_free_round(
     )
 
 
+# ---------------------------------------------------------------------------
+# In-graph occupancy introspection (serving observability)
+# ---------------------------------------------------------------------------
+
+
+def pool_free_units(pcfg: PoolConfig, trees: Array) -> Array:
+    """Free allocation units per shard, int32[S] — computed in-graph.
+
+    A leaf is free iff it is allocatable under the tree's layout (word
+    bit-free and no reserved ancestor), so the per-shard sum over the
+    leaf slice is exactly `NBBSRef.free_bytes() / min_size` of the host
+    mirror.  O(n_words) vector work; cheap enough to ride along in the
+    jitted engine step's stats (docs/design.md §8)."""
+    cfg = pcfg.tree
+    lo = 1 << cfg.depth
+
+    def one(tree):
+        alloc = cfg.layout.allocatable(cfg, tree)
+        return alloc[lo : 2 * lo].sum(dtype=jnp.int32)
+
+    return jax.vmap(one)(trees)
+
+
+def pool_largest_run(pcfg: PoolConfig, trees: Array) -> Array:
+    """Largest allocatable run (in units) across all shards, int32
+    scalar — the in-graph mirror of `PagedKVManager.fragmentation()`'s
+    `largest_run` (fragmentation observability without a host sync)."""
+    cfg = pcfg.tree
+
+    def one(tree):
+        alloc = cfg.layout.allocatable(cfg, tree)
+        best = jnp.int32(0)
+        # static unrolled loop, deepest level first so larger runs win
+        for lev in range(cfg.depth, cfg.max_level - 1, -1):
+            lo, hi = 1 << lev, 1 << (lev + 1)
+            has = alloc[lo:hi].any()
+            best = jnp.where(has, jnp.int32(1 << (cfg.depth - lev)), best)
+        return best
+
+    return jax.vmap(one)(trees).max()
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def pool_wavefront_free(
     pcfg: PoolConfig,

@@ -42,6 +42,17 @@ Invariants (deep-linked from docs/architecture.md):
   * double frees cannot cross shards: a handle resolves through its own
     shard's index[] only (see `core/nbbs_jax.py` invariants for the
     arbitration rule on the device path).
+
+Two host views live here (docs/design.md §8):
+
+  * `PagedKVManager` — the run-granularity manager the host-driven
+    `ServeEngine` allocates through (buddy runs, growth by doubling);
+  * `PageOracle` — the page-granularity differential oracle of the
+    *jit-resident* engine: per-shard `NBBSRef` trees driven through an
+    exact host emulation of `core/pool.pool_wavefront_alloc`'s round
+    semantics, handing out the same global page ids the device tables
+    carry.  The jitted engine must match it bit-for-bit on page
+    assignments and pool occupancy (tests/test_serving.py).
 """
 
 from __future__ import annotations
@@ -268,21 +279,7 @@ class PagedKVManager:
         return sum(b.free_bytes() for b in self.buddies)  # unit == page
 
     def _largest_run_on(self, buddy: NBBSRef) -> int:
-        from repro.core.bits import is_free
-
-        probe = self.max_run_pages
-        while probe >= 1:
-            # non-destructive probe: scan the level for a free node
-            level = buddy.level_for_size(probe)
-            base = 1 << level
-            if any(
-                is_free(buddy.tree[i])
-                and not self._occupied_ancestor(buddy, i)
-                for i in range(base, 2 * base)
-            ):
-                return probe
-            probe //= 2
-        return 0
+        return _largest_free_run(buddy, self.max_run_pages)
 
     def fragmentation(self) -> dict:
         """Occupancy + largest allocatable run (O(tree) introspection),
@@ -305,11 +302,175 @@ class PagedKVManager:
         }
 
     def _occupied_ancestor(self, buddy: NBBSRef, n: int) -> bool:
-        from repro.core.bits import OCC
+        return _occupied_ancestor(buddy, n)
 
+
+def _occupied_ancestor(buddy: NBBSRef, n: int) -> bool:
+    from repro.core.bits import OCC
+
+    n >>= 1
+    while n >= 1:
+        if buddy.tree[n] & OCC:
+            return True
         n >>= 1
-        while n >= 1:
-            if buddy.tree[n] & OCC:
-                return True
-            n >>= 1
-        return False
+    return False
+
+
+def _largest_free_run(buddy: NBBSRef, max_probe: int) -> int:
+    """Largest allocatable run on one tree (non-destructive probe)."""
+    from repro.core.bits import is_free
+
+    probe = max_probe
+    while probe >= 1:
+        level = buddy.level_for_size(probe)
+        base = 1 << level
+        if any(
+            is_free(buddy.tree[i]) and not _occupied_ancestor(buddy, i)
+            for i in range(base, 2 * base)
+        ):
+            return probe
+        probe //= 2
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# PageOracle: host differential oracle of the jit-resident engine pool
+# ---------------------------------------------------------------------------
+
+
+class PageOracle:
+    """Leaf-only page allocator mirroring the jitted engine's in-graph
+    pool, page by page.
+
+    The jit-resident engine (`serve/jit_engine.py`) claims KV pages one
+    leaf unit at a time through `pool_wavefront_alloc`.  This class
+    drives per-shard `NBBSRef` trees through an *exact* host emulation
+    of those pool rounds, so a host-driven replay of the same request
+    trace must produce identical page ids and identical final trees:
+
+      * each request's home shard is the Fibonacci hash of its lane id
+        (`home_shard`, shared constant with `core/pool.py`);
+      * per round, per shard, the routed requests allocate sequentially
+        in lane order with first-fit leaf scans (`scattered=False`) —
+        equivalent to the device round's rank/prefix-sum assignment,
+        because allocating the rank-r allocatable leaf never changes the
+        allocatability of leaves ranked above it;
+      * a shard whose *first* attempted allocation of the round fails
+        had zero allocatable leaves at round start — the device round's
+        `exhausted` condition — so every request routed there advances
+        its probe (`shard+1`, cyclic), failing after S probes.  A
+        request that fails *after* wins on its shard merely lost
+        arbitration and retries the same shard next round;
+      * releases are burst frees grouped per shard (`nb_free_many`),
+        the host mirror of `pool_free_round`.
+
+    Page ids are global (`base_address` folds the shard base in), the
+    same numbering the engine's device block tables carry.
+    """
+
+    def __init__(
+        self,
+        num_pages: int,
+        page_tokens: int,
+        n_shards: int = 1,
+        max_rounds: int = 64,
+    ) -> None:
+        if num_pages & (num_pages - 1):
+            raise ValueError("num_pages must be a power of two")
+        if n_shards < 1 or (n_shards & (n_shards - 1)):
+            raise ValueError("n_shards must be a power of two >= 1")
+        if num_pages % n_shards:
+            raise ValueError("num_pages must divide evenly across shards")
+        self.num_pages = num_pages
+        self.page_tokens = page_tokens
+        self.n_shards = n_shards
+        self.max_rounds = max_rounds
+        self.pages_per_shard = num_pages // n_shards
+        self.buddies = [
+            NBBSRef(
+                self.pages_per_shard,
+                1,
+                max_size=self.pages_per_shard,
+                base_address=s * self.pages_per_shard,
+            )
+            for s in range(n_shards)
+        ]
+
+    def home_shard(self, lane_id: int) -> int:
+        return ((lane_id * FIB_HASH) & 0xFFFFFFFF) % self.n_shards
+
+    def alloc_wavefront(self, requests) -> Dict[int, Optional[int]]:
+        """Emulate one `pool_wavefront_alloc` over `requests`, a list of
+        (key, lane_id) pairs **in device lane order**.  Returns
+        key -> global page id (None = failed after probing S shards)."""
+        out: Dict[int, Optional[int]] = {k: None for k, _ in requests}
+        pend = [
+            (k, lid, self.home_shard(lid), 0) for k, lid in requests
+        ]
+        for _ in range(self.max_rounds):
+            if not pend:
+                break
+            nxt = []
+            for s in range(self.n_shards):
+                entries = [e for e in pend if e[2] == s]
+                if not entries:
+                    continue
+                exhausted = False
+                won = 0
+                for idx, (k, lid, sh, att) in enumerate(entries):
+                    if exhausted:
+                        if att + 1 < self.n_shards:
+                            nxt.append(
+                                (k, lid, (sh + 1) % self.n_shards, att + 1)
+                            )
+                        continue  # att+1 >= S: probed every shard, fail
+                    addr = self.buddies[s].nb_alloc(1, scattered=False)
+                    if addr is not None:
+                        out[k] = addr
+                        won += 1
+                    elif won:
+                        # lost arbitration (rank >= cnt): the shard still
+                        # had pages this round, so stay and retry it
+                        nxt.extend(entries[idx:])
+                        break
+                    else:
+                        exhausted = True
+                        if att + 1 < self.n_shards:
+                            nxt.append(
+                                (k, lid, (sh + 1) % self.n_shards, att + 1)
+                            )
+            pend = nxt
+        return out
+
+    def free_burst(self, pages) -> None:
+        """Release global page ids, one merged burst per shard (the
+        host mirror of the engine's in-graph `pool_free_round`)."""
+        per_shard: Dict[int, List[int]] = {}
+        for p in pages:
+            per_shard.setdefault(p // self.pages_per_shard, []).append(p)
+        for s, addrs in per_shard.items():
+            self.buddies[s].nb_free_many(addrs)
+
+    # -- occupancy ----------------------------------------------------
+    def free_pages(self) -> int:
+        return sum(b.free_bytes() for b in self.buddies)
+
+    def per_shard_free(self) -> List[int]:
+        return [b.free_bytes() for b in self.buddies]
+
+    def fragmentation(self) -> dict:
+        per_shard_largest = [
+            _largest_free_run(b, self.pages_per_shard) for b in self.buddies
+        ]
+        free = self.free_pages()
+        return {
+            "free_pages": free,
+            "used_pages": self.num_pages - free,
+            "largest_run": max(per_shard_largest),
+            "per_shard_free": self.per_shard_free(),
+            "per_shard_largest_run": per_shard_largest,
+        }
+
+    def check_invariants(self) -> None:
+        for b in self.buddies:
+            b.check_invariants()

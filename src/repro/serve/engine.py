@@ -23,8 +23,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.memory.kv_cache import PagedKVManager
-from repro.models.transformer import prefill
-from repro.serve.paged_decode import init_pool, paged_decode_step
+from repro.serve.paged_decode import init_pool, paged_decode_step, serve_prefill
 
 Array = jax.Array
 
@@ -52,6 +51,8 @@ class ServeEngine:
         impl: str = "auto",
         n_shards: int = 1,
         layout: Optional[str] = None,
+        max_table_pages: Optional[int] = None,
+        log_stats: bool = False,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
             "paged engine covers attention families; SSM/hybrid use "
@@ -74,13 +75,22 @@ class ServeEngine:
             num_pages, page_tokens, n_shards=n_shards, layout=layout
         )
         self.pool = init_pool(cfg, num_pages, page_tokens, dtype)
-        self.max_pages = num_pages
+        # width of the per-sequence block tables handed to the kernel;
+        # capping it (e.g. to the longest admissible sequence) keeps the
+        # attention gather proportional to sequence capacity instead of
+        # pool capacity
+        self.max_pages = min(num_pages, max_table_pages or num_pages)
         self.running: Dict[int, Request] = {}
         self.ctx_lens: Dict[int, int] = {}
         self.waiting: List[Request] = []
         self.completed: Dict[int, Request] = {}
         self.stats = {"admitted": 0, "queued_full": 0, "rejected": 0,
                       "steps": 0}
+        # opt-in per-step observability (the host-loop counterpart of
+        # the jitted engine's EngineStepStats; fragmentation() is an
+        # O(tree) host scan, hence the flag)
+        self.log_stats = log_stats
+        self.step_log: List[dict] = []
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -117,7 +127,7 @@ class ServeEngine:
         for req in reqs:
             S = len(req.prompt)
             batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-            lg, cache = prefill(
+            lg, cache = serve_prefill(
                 self.cfg, self.params, batch, max_len=S, dtype=self.dtype
             )
             table = self.kv.block_table(req.req_id, self.max_pages)
@@ -145,16 +155,23 @@ class ServeEngine:
             return 0
         ids = sorted(self.running)
         B = len(ids)
-        tables = np.stack(
+        # pad the decode batch to a power-of-two bucket (inactive rows
+        # masked out inside paged_decode_step): bounds the number of
+        # compiled batch shapes to log2(max_batch) instead of one per
+        # distinct running-count
+        B2 = 1 << max(B - 1, 0).bit_length()
+        tables = np.full((B2, self.max_pages), -1, np.int32)
+        tables[:B] = np.stack(
             [self.kv.block_table(i, self.max_pages) for i in ids]
         )
-        ctx = np.asarray(
-            [self.ctx_lens[i] + len(self.running[i].out_tokens) - 1 for i in ids],
-            np.int32,
-        )
-        toks = np.asarray(
-            [self.running[i].out_tokens[-1] for i in ids], np.int32
-        )
+        ctx = np.zeros(B2, np.int32)
+        ctx[:B] = [
+            self.ctx_lens[i] + len(self.running[i].out_tokens) - 1
+            for i in ids
+        ]
+        toks = np.zeros(B2, np.int32)
+        toks[:B] = [self.running[i].out_tokens[-1] for i in ids]
+        active = np.arange(B2) < B
         lg, self.pool = paged_decode_step(
             self.cfg,
             self.params,
@@ -165,8 +182,9 @@ class ServeEngine:
             page_tokens=self.page_tokens,
             impl=self.impl,
             dtype=self.dtype,
+            active=jnp.asarray(active),
         )
-        nxt = np.argmax(np.asarray(lg), axis=-1)
+        nxt = np.argmax(np.asarray(lg)[:B], axis=-1)
         self.stats["steps"] += 1
         retired = []
         for i, t in zip(ids, nxt):
@@ -185,6 +203,15 @@ class ServeEngine:
         if retired:
             # all sequences finishing this step release as one burst
             self.kv.free_sequences(retired)
+        if self.log_stats:
+            frag = self.kv.fragmentation()
+            self.step_log.append({
+                "step": self.stats["steps"],
+                "active_lanes": len(self.running),
+                "retired": len(retired),
+                "free_pages": frag["free_pages"],
+                "largest_run": frag["largest_run"],
+            })
         return len(self.running)
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:

@@ -1,0 +1,691 @@
+"""Jit-resident continuous-batching engine — one compiled decode step.
+
+The host-orchestrated `serve.engine.ServeEngine` proves the buddy
+system *admits* realistic serving traffic, but every decode token pays
+a host round-trip: tables are rebuilt in numpy, logits sync back for
+argmax, and the allocator of record is the host-side `NBBSRef`.  This
+module is the ROADMAP's "millions-of-users" refactor: the whole per-
+iteration loop — paged decode attention, in-graph page allocation for
+lanes crossing a page boundary, greedy sampling, retirement detection,
+and the burst free of retired sequences — is one `jax.jit`-compiled
+`engine_step` over a device-resident `EngineState`, with **zero host
+synchronization inside the step** (verified by the trace-count /
+transfer-guard test in tests/test_serving.py).  The Python
+`JitServeEngine` is reduced to a thin request-queue shim that drains
+arrivals into the compiled step at chunk boundaries.
+
+Design (docs/design.md §8):
+
+  * the engine runs `max_batch` fixed *lanes*; a lane is either empty
+    (`seq_id == -1`) or carries one sequence.  All shapes are static,
+    so N decode steps re-use one executable;
+  * KV pages are allocated *one leaf unit at a time*: admission claims
+    the prompt's pages through the same in-graph wavefront
+    (`nb_pool_alloc_pages`, all-or-nothing with in-graph rollback), and
+    decode steps claim one page for every lane whose next token starts
+    a page (`ctx == n_pages * page_tokens`).  Leaf-only allocation
+    means the engine pytree needs no index[]: a page handle is the
+    (shard, unit_offset) pair stored directly in the lane's page
+    table, and the global page id is `shard * pages_per_shard + off`;
+  * retirement (out-budget reached, EOS, or an in-step allocation
+    overflow) frees **all** of a lane's pages as one merged
+    `pool_free_round` burst inside the same compiled step;
+  * the prompt's last token is decoded by the *engine*, not prefill:
+    prefill (bucketed to power-of-two lengths so compiles are bounded)
+    only populates the KV pages of positions `0..S-2`, and the lane
+    enters with `ctx = S-1, last_tok = prompt[-1]`.  The first engine
+    step then computes position S-1 through the paged path — identical
+    attention set, and no per-prompt-length recompiles;
+  * `engine_step` returns an `EngineStepStats` struct of device
+    scalars (pages allocated/freed, overflow lanes, probe overflows,
+    free pages + largest allocatable run from the in-graph occupancy
+    scan, RMW counters) that the shim accumulates lazily — reading
+    them is the *caller's* sync, never the step's.
+
+Failure semantics mirror the PR 1/3 hardening exactly (regression
+tests in tests/test_serving.py): requests that can never fit the lane
+geometry are rejected at admission instead of head-of-line blocking,
+and junk page handles in a lane table are dropped by the free round's
+validity mask instead of aliasing live pages.
+
+The differential oracle is `serve.oracle.HostOracleEngine` — the same
+scheduling policy run from Python against per-shard `NBBSRef` trees —
+which must produce identical page assignments, retirement order, and
+final pool occupancy on a replayed trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import Counter
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
+from repro.core.nbbs_jax import nb_pool_alloc_pages, nb_pool_free_pages
+from repro.core.pool import PoolConfig, pool_free_units, pool_largest_run
+from repro.serve.engine import Request
+from repro.serve.paged_decode import paged_decode_step, serve_prefill
+
+Array = jax.Array
+
+# Incremented inside the traced step body: tracing happens only at
+# compile time, so tests can assert "N steps, one trace" (the
+# no-recompilation guarantee) by watching this counter.
+TRACE_COUNTS: Counter = Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static geometry of the jitted engine (hashable -> one compile
+    per geometry, shared across engine instances)."""
+
+    arch: ArchConfig
+    num_pages: int
+    page_tokens: int
+    max_batch: int
+    max_lane_pages: int
+    max_out: int
+    n_shards: int = 1
+    layout: str = "unpacked"
+    eos: Optional[int] = None
+    impl: str = "auto"
+    dtype: str = "float32"
+    max_rounds: int = 64
+
+    def __post_init__(self):
+        if self.num_pages & (self.num_pages - 1):
+            raise ValueError("num_pages must be a power of two")
+        if self.n_shards < 1 or (self.n_shards & (self.n_shards - 1)):
+            raise ValueError("n_shards must be a power of two >= 1")
+        if self.num_pages % self.n_shards:
+            raise ValueError("num_pages must divide evenly across shards")
+        if self.layout not in ("unpacked", "bunch-packed"):
+            raise ValueError(f"unknown tree layout {self.layout!r}")
+
+    @property
+    def pages_per_shard(self) -> int:
+        return self.num_pages // self.n_shards
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def pool_config(self) -> PoolConfig:
+        depth = (self.pages_per_shard - 1).bit_length()
+        layout = BUNCH_PACKED if self.layout == "bunch-packed" else UNPACKED
+        return PoolConfig(TreeConfig(depth=depth, max_level=0, layout=layout), self.n_shards)
+
+    def lane_capacity_tokens(self) -> int:
+        return self.max_lane_pages * self.page_tokens
+
+
+class EngineState(NamedTuple):
+    """Device-resident engine state, threaded through `engine_step`."""
+
+    trees: Array       # [S, n_state_words] pool tree state (layout dtype)
+    kv_k: Array        # [L, P, page, Hkv, D] global KV page pool
+    kv_v: Array
+    page_shard: Array  # int32[B, MP]  page handle shard, -1 = no page
+    page_off: Array    # int32[B, MP]  page handle unit offset
+    seq_id: Array      # int32[B]      -1 = empty lane
+    ctx: Array         # int32[B]      tokens currently in the KV cache
+    n_pages: Array     # int32[B]      pages mapped in the lane table
+    last_tok: Array    # int32[B]      next decode input token
+    out_toks: Array    # int32[B, MO]  generated tokens
+    n_out: Array       # int32[B]      generated-so-far
+    max_new: Array     # int32[B]      per-lane output budget
+    active: Array      # bool[B]       decoding this step?
+    overflowed: Array  # bool[B]       retired by in-step alloc failure
+    done_step: Array   # int32[B]      step index of retirement, -1 live
+    step_no: Array     # int32 scalar  global step counter
+
+
+class EngineStepStats(NamedTuple):
+    """Per-step observability, all int32 device scalars (lazy)."""
+
+    alloc_pages: Array        # pages claimed in-graph this step
+    freed_pages: Array        # pages released by the retirement burst
+    overflow_lanes: Array     # lanes retired because the pool ran out
+    probe_overflows: Array    # allocs served off their home shard
+    retired: Array            # lanes retired this step (any reason)
+    active_lanes: Array       # lanes still decoding after the step
+    alloc_rounds: Array       # pool arbitration rounds
+    merged_writes: Array      # alloc-side merged word writes
+    logical_rmws: Array       # alloc-side paper-metric RMWs
+    free_merged_writes: Array
+    free_logical_rmws: Array
+    free_pages: Array         # pool-wide free pages after the step
+    largest_run: Array        # largest allocatable run (fragmentation)
+
+
+def _zero_stats() -> EngineStepStats:
+    z = jnp.int32(0)
+    return EngineStepStats(*([z] * len(EngineStepStats._fields)))
+
+
+def init_engine_state(ecfg: EngineConfig) -> EngineState:
+    arch = ecfg.arch
+    B, MP, MO = ecfg.max_batch, ecfg.max_lane_pages, ecfg.max_out
+    pcfg = ecfg.pool_config()
+    kv_shape = (
+        arch.n_layers, ecfg.num_pages, ecfg.page_tokens,
+        arch.n_kv_heads, arch.head_dim,
+    )
+    return EngineState(
+        trees=pcfg.empty_trees(),
+        kv_k=jnp.zeros(kv_shape, ecfg.jdtype),
+        kv_v=jnp.zeros(kv_shape, ecfg.jdtype),
+        page_shard=jnp.full((B, MP), -1, jnp.int32),
+        page_off=jnp.full((B, MP), -1, jnp.int32),
+        seq_id=jnp.full((B,), -1, jnp.int32),
+        ctx=jnp.zeros((B,), jnp.int32),
+        n_pages=jnp.zeros((B,), jnp.int32),
+        last_tok=jnp.zeros((B,), jnp.int32),
+        out_toks=jnp.zeros((B, MO), jnp.int32),
+        n_out=jnp.zeros((B,), jnp.int32),
+        max_new=jnp.zeros((B,), jnp.int32),
+        active=jnp.zeros((B,), bool),
+        overflowed=jnp.zeros((B,), bool),
+        done_step=jnp.full((B,), -1, jnp.int32),
+        step_no=jnp.int32(0),
+    )
+
+
+def global_tables(ecfg: EngineConfig, page_shard: Array, page_off: Array) -> Array:
+    """Device-table view: global page ids, -1 padded — what the paged-
+    attention kernel consumes (shard base folded in, mirroring the host
+    `PagedKVManager.block_table` numbering)."""
+    return jnp.where(
+        page_shard >= 0,
+        page_shard * ecfg.pages_per_shard + page_off,
+        -1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The compiled step
+# ---------------------------------------------------------------------------
+
+
+def _engine_step_impl(
+    ecfg: EngineConfig, params: dict, state: EngineState
+) -> Tuple[EngineState, EngineStepStats]:
+    TRACE_COUNTS[ecfg] += 1  # python side effect: fires at trace only
+    pcfg = ecfg.pool_config()
+    B, MP, MO = ecfg.max_batch, ecfg.max_lane_pages, ecfg.max_out
+    pt = ecfg.page_tokens
+    bidx = jnp.arange(B)
+
+    # -- 1. in-graph page allocation for lanes crossing a page boundary
+    need = state.active & (state.ctx == state.n_pages * pt)
+    need = need & (state.n_pages < MP)  # lane table full = overflow
+    trees, a_shard, a_off, ok, astats = nb_pool_alloc_pages(
+        pcfg, state.trees, need, state.seq_id, ecfg.max_rounds
+    )
+    pos = jnp.clip(state.n_pages, 0, MP - 1)
+    page_shard = state.page_shard.at[bidx, pos].set(
+        jnp.where(ok, a_shard, state.page_shard[bidx, pos])
+    )
+    page_off = state.page_off.at[bidx, pos].set(
+        jnp.where(ok, a_off, state.page_off[bidx, pos])
+    )
+    n_pages = state.n_pages + ok.astype(jnp.int32)
+    overflow_now = (state.active & (state.ctx == state.n_pages * pt)) & ~ok
+
+    # -- 2. one paged decode for every writable lane ------------------
+    writable = state.active & ~overflow_now
+    tables = global_tables(ecfg, page_shard, page_off)
+    pool = {"k": state.kv_k, "v": state.kv_v}
+    logits, pool = paged_decode_step(
+        ecfg.arch, params, pool, tables, state.ctx, state.last_tok,
+        page_tokens=pt, impl=ecfg.impl, dtype=ecfg.jdtype,
+        active=writable,
+    )
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    wrote = writable
+    ctx = state.ctx + wrote.astype(jnp.int32)
+    out_pos = jnp.clip(state.n_out, 0, MO - 1)
+    out_toks = state.out_toks.at[bidx, out_pos].set(
+        jnp.where(wrote, nxt, state.out_toks[bidx, out_pos])
+    )
+    n_out = state.n_out + wrote.astype(jnp.int32)
+    last_tok = jnp.where(wrote, nxt, state.last_tok)
+
+    # -- 3. retirement: budget reached, EOS, or alloc overflow --------
+    finished = wrote & (n_out >= state.max_new)
+    if ecfg.eos is not None:
+        finished = finished | (wrote & (nxt == ecfg.eos))
+    retire = finished | overflow_now
+
+    # -- 4. burst free of every retired lane's pages ------------------
+    f_active = (retire[:, None] & (page_shard >= 0)).reshape(-1)
+    trees, freed, fstats = nb_pool_free_pages(
+        pcfg, trees,
+        page_shard.reshape(-1), page_off.reshape(-1), f_active,
+    )
+    page_shard = jnp.where(retire[:, None], -1, page_shard)
+    page_off = jnp.where(retire[:, None], -1, page_off)
+    n_pages = jnp.where(retire, 0, n_pages)
+    active = state.active & ~retire
+    overflowed = state.overflowed | overflow_now
+    done_step = jnp.where(
+        retire & (state.done_step < 0), state.step_no, state.done_step
+    )
+
+    new_state = EngineState(
+        trees=trees, kv_k=pool["k"], kv_v=pool["v"],
+        page_shard=page_shard, page_off=page_off,
+        seq_id=state.seq_id, ctx=ctx, n_pages=n_pages,
+        last_tok=last_tok, out_toks=out_toks, n_out=n_out,
+        max_new=state.max_new, active=active, overflowed=overflowed,
+        done_step=done_step, step_no=state.step_no + 1,
+    )
+    stats = EngineStepStats(
+        alloc_pages=ok.sum(dtype=jnp.int32),
+        freed_pages=freed.sum(dtype=jnp.int32),
+        overflow_lanes=overflow_now.sum(dtype=jnp.int32),
+        probe_overflows=astats["overflows"],
+        retired=retire.sum(dtype=jnp.int32),
+        active_lanes=active.sum(dtype=jnp.int32),
+        alloc_rounds=astats["rounds"],
+        merged_writes=astats["merged_writes"],
+        logical_rmws=astats["logical_rmws"],
+        free_merged_writes=fstats["free_merged_writes"],
+        free_logical_rmws=fstats["free_logical_rmws"],
+        free_pages=pool_free_units(pcfg, trees).sum(dtype=jnp.int32),
+        largest_run=pool_largest_run(pcfg, trees),
+    )
+    return new_state, stats
+
+
+# the EngineState argument is donated everywhere below: the KV pool is
+# by far the largest buffer in the state, and donation lets XLA update
+# it in place instead of copying pool-sized buffers every dispatch
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def engine_step(
+    ecfg: EngineConfig, params: dict, state: EngineState
+) -> Tuple[EngineState, EngineStepStats]:
+    """One fully-fused decode iteration (alloc + decode + free)."""
+    return _engine_step_impl(ecfg, params, state)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(2,))
+def engine_run(
+    ecfg: EngineConfig, params: dict, state: EngineState, num_steps: int
+) -> Tuple[EngineState, EngineStepStats]:
+    """`num_steps` fused decode iterations under one `lax.scan` — a
+    whole chunk of tokens per dispatch, still zero host syncs.  Returns
+    (state, stats with a leading [num_steps] axis)."""
+    def body(st, _):
+        return _engine_step_impl(ecfg, params, st)
+
+    return jax.lax.scan(body, state, None, length=num_steps)
+
+
+# ---------------------------------------------------------------------------
+# Admission-boundary helpers (host calls these *between* decode bursts)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def admit_pages(
+    ecfg: EngineConfig, trees: Array, seq_id: Array, need: Array
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """All-or-nothing in-graph claim of `need` prompt pages for one
+    sequence: every page is a leaf-unit wavefront lane homed by the
+    sequence id; on partial failure the successes are rolled back by
+    the same merged free pass, so a failed admission leaves the pool
+    bit-identical.  Returns (trees, shards[MP], offs[MP], admitted,
+    probe_overflows)."""
+    pcfg = ecfg.pool_config()
+    MP = ecfg.max_lane_pages
+    lanes = jnp.arange(MP)
+    active = lanes < need
+    lane_ids = jnp.full((MP,), seq_id, jnp.int32)
+    trees1, shard, off, ok, stats = nb_pool_alloc_pages(
+        pcfg, trees, active, lane_ids, ecfg.max_rounds
+    )
+    admitted = ok.sum(dtype=jnp.int32) == need
+    trees_rb, _, _ = nb_pool_free_pages(
+        pcfg, trees1, shard, off, ok & jnp.logical_not(admitted)
+    )
+    trees_out = jnp.where(admitted, trees1, trees_rb)
+    keep = admitted & ok
+    return (
+        trees_out,
+        jnp.where(keep, shard, -1),
+        jnp.where(keep, off, -1),
+        admitted,
+        stats["overflows"],
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def prefill_insert(
+    ecfg: EngineConfig,
+    state: EngineState,
+    lane: Array,        # int32 scalar: empty lane index
+    seq_id: Array,      # int32 scalar
+    shards: Array,      # int32[MP] from admit_pages
+    offs: Array,        # int32[MP]
+    n_pages: Array,     # int32 scalar: pages actually claimed
+    kv_len: Array,      # int32 scalar: prompt tokens to copy (= S-1)
+    cache_k: Array,     # [L, Spad, Hkv, D] prefill KV (bucketed)
+    cache_v: Array,
+    last_tok: Array,    # int32 scalar: prompt's final token
+    max_new: Array,     # int32 scalar
+) -> EngineState:
+    """Insert an admitted sequence into an empty lane: scatter the
+    prefill KV of positions 0..kv_len-1 into its pages and set the lane
+    registers so the next `engine_step` decodes position kv_len (the
+    prompt's last token) through the paged path."""
+    pt, P, MP = ecfg.page_tokens, ecfg.num_pages, ecfg.max_lane_pages
+    gpage = jnp.where(shards >= 0, shards * ecfg.pages_per_shard + offs, P)
+    Spad = cache_k.shape[1]
+    t = jnp.arange(Spad)
+    mask = t < kv_len
+    pidx = gpage[jnp.clip(t // pt, 0, MP - 1)]
+    pidx = jnp.where(mask, pidx, P)  # OOB page -> dropped write
+    slot = t % pt
+    kv_k = state.kv_k.at[:, pidx, slot].set(cache_k, mode="drop")
+    kv_v = state.kv_v.at[:, pidx, slot].set(cache_v, mode="drop")
+    return state._replace(
+        kv_k=kv_k, kv_v=kv_v,
+        page_shard=state.page_shard.at[lane].set(shards),
+        page_off=state.page_off.at[lane].set(offs),
+        seq_id=state.seq_id.at[lane].set(seq_id),
+        ctx=state.ctx.at[lane].set(kv_len),
+        n_pages=state.n_pages.at[lane].set(n_pages),
+        last_tok=state.last_tok.at[lane].set(last_tok),
+        n_out=state.n_out.at[lane].set(0),
+        max_new=state.max_new.at[lane].set(max_new),
+        active=state.active.at[lane].set(True),
+        overflowed=state.overflowed.at[lane].set(False),
+        done_step=state.done_step.at[lane].set(-1),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def clear_lanes(
+    ecfg: EngineConfig, state: EngineState, mask: Array
+) -> EngineState:
+    """Reset drained lanes to empty (their pages were already freed by
+    the retirement burst inside `engine_step`)."""
+    return state._replace(
+        seq_id=jnp.where(mask, -1, state.seq_id),
+        ctx=jnp.where(mask, 0, state.ctx),
+        n_out=jnp.where(mask, 0, state.n_out),
+        overflowed=jnp.where(mask, False, state.overflowed),
+        done_step=jnp.where(mask, -1, state.done_step),
+    )
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+@jax.jit
+def _reduce_traj(traj: EngineStepStats) -> EngineStepStats:
+    """Collapse a [num_steps]-stacked stats trajectory to chunk totals
+    (counters sum; occupancy gauges keep the final step's value).
+    Jitted so chunked accumulation stays transfer-free."""
+    s = jax.tree.map(lambda x: x.sum(dtype=jnp.int32), traj)
+    return s._replace(
+        active_lanes=traj.active_lanes[-1],
+        free_pages=traj.free_pages[-1],
+        largest_run=traj.largest_run[-1],
+    )
+
+
+@jax.jit
+def _acc_stats(acc: EngineStepStats, stat: EngineStepStats) -> EngineStepStats:
+    """acc + stat with gauge fields overwritten instead of summed."""
+    out = jax.tree.map(jnp.add, acc, stat)
+    return out._replace(
+        active_lanes=stat.active_lanes,
+        free_pages=stat.free_pages,
+        largest_run=stat.largest_run,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The thin host shim
+# ---------------------------------------------------------------------------
+
+
+class JitServeEngine:
+    """Request-queue shim around the compiled step.
+
+    The public surface mirrors `ServeEngine` (submit / step /
+    run_to_completion / stats / completed) so callers migrate by
+    swapping the class; the difference is *where the loop lives*: all
+    per-token work happens on device inside `engine_step`, and the host
+    only touches the state at drain/admission boundaries (`decode_steps`
+    runs whole chunks with no host sync at all)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        num_pages: int = 256,
+        page_tokens: int = 16,
+        max_batch: int = 8,
+        max_lane_pages: Optional[int] = None,
+        max_out: int = 64,
+        eos_token: Optional[int] = None,
+        dtype=jnp.float32,
+        impl: str = "auto",
+        n_shards: int = 1,
+        layout: Optional[str] = None,
+        max_rounds: int = 64,
+    ) -> None:
+        assert cfg.family in ("dense", "moe", "vlm", "audio"), (
+            "paged engine covers attention families (docs/design.md §5)"
+        )
+        if max_lane_pages is None:
+            max_lane_pages = min(num_pages, 128)
+        self.ecfg = EngineConfig(
+            arch=cfg,
+            num_pages=num_pages,
+            page_tokens=page_tokens,
+            max_batch=max_batch,
+            max_lane_pages=max_lane_pages,
+            max_out=max_out,
+            n_shards=n_shards,
+            layout=layout or "unpacked",
+            eos=eos_token,
+            impl=impl,
+            dtype=jnp.dtype(dtype).name,
+            max_rounds=max_rounds,
+        )
+        self.cfg = cfg
+        self.params = params
+        self.page_tokens = page_tokens
+        self.max_batch = max_batch
+        self.state = init_engine_state(self.ecfg)
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}   # seq_id -> request
+        self._lane_of: Dict[int, int] = {}
+        self.completed: Dict[int, Request] = {}
+        self.done_steps: Dict[int, int] = {}    # seq_id -> retire step
+        self.retired_order: List[int] = []      # drain-observed order
+        self.stats = {
+            "admitted": 0, "queued_full": 0, "rejected": 0,
+            "steps": 0, "overflow_retired": 0,
+        }
+        self.acc = _zero_stats()  # running device-side stat totals
+
+    # -- admission ----------------------------------------------------
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_tokens)
+
+    def _oversized(self, req: Request) -> bool:
+        """A request that can never fit the lane geometry (mirrors the
+        PagedKVManager ValueError semantics: reject, don't block)."""
+        total = len(req.prompt) + req.max_new_tokens
+        return (
+            self._pages_for(total) > self.ecfg.max_lane_pages
+            or self._pages_for(total) > self.ecfg.num_pages
+            or req.max_new_tokens > self.ecfg.max_out
+        )
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _free_lanes(self) -> List[int]:
+        seq = np.asarray(self.state.seq_id)
+        return [int(i) for i in np.nonzero(seq < 0)[0]]
+
+    def _admit(self) -> None:
+        free = self._free_lanes()
+        while self.waiting and free:
+            req = self.waiting[0]
+            if self._oversized(req):
+                self.waiting.pop(0)
+                req.done = True
+                self.completed[req.req_id] = req
+                self.stats["rejected"] += 1
+                continue
+            need = self._pages_for(len(req.prompt) - 1)
+            trees, shards, offs, admitted, _ = admit_pages(
+                self.ecfg, self.state.trees,
+                jnp.int32(req.req_id), jnp.int32(need),
+            )
+            if not bool(admitted):
+                self.stats["queued_full"] += 1
+                break  # pool full: natural admission control
+            self.waiting.pop(0)
+            self.state = self.state._replace(trees=trees)
+            self._insert(free.pop(0), req, shards, offs, need)
+            self.stats["admitted"] += 1
+
+    def _insert(self, lane: int, req: Request, shards, offs, n_pages) -> None:
+        S = len(req.prompt)
+        arch, ecfg = self.cfg, self.ecfg
+        Spad = _next_pow2(S)
+        if S > 1:
+            toks = np.zeros((1, Spad), np.int32)
+            toks[0, :S] = req.prompt
+            _, cache = serve_prefill(
+                arch, self.params, {"tokens": jnp.asarray(toks)},
+                max_len=Spad, dtype=ecfg.jdtype,
+            )
+            cache_k, cache_v = cache["k"][:, 0], cache["v"][:, 0]
+        else:
+            kv_shape = (
+                arch.n_layers, Spad, arch.n_kv_heads, arch.head_dim
+            )
+            cache_k = jnp.zeros(kv_shape, ecfg.jdtype)
+            cache_v = jnp.zeros(kv_shape, ecfg.jdtype)
+        self.state = prefill_insert(
+            ecfg, self.state,
+            jnp.int32(lane), jnp.int32(req.req_id), shards, offs,
+            jnp.int32(n_pages), jnp.int32(S - 1), cache_k, cache_v,
+            jnp.int32(req.prompt[S - 1]), jnp.int32(req.max_new_tokens),
+        )
+        self.running[req.req_id] = req
+        self._lane_of[req.req_id] = lane
+
+    # -- the device loop ----------------------------------------------
+    def decode_steps(self, n: int, *, fused: bool = False) -> None:
+        """Run n compiled decode iterations with no host sync.  With
+        `fused=True` the whole chunk is one `lax.scan` dispatch."""
+        if fused:
+            self.state, traj = engine_run(
+                self.ecfg, self.params, self.state, n
+            )
+            self.acc = _acc_stats(self.acc, _reduce_traj(traj))
+        else:
+            for _ in range(n):
+                self.state, stat = engine_step(
+                    self.ecfg, self.params, self.state
+                )
+                self.acc = _acc_stats(self.acc, stat)
+        self.stats["steps"] += n
+
+    def _drain(self) -> List[int]:
+        """Collect retired lanes (one host sync), clear them, and
+        return the drained seq ids in retirement-step order."""
+        seq, act, n_out, out_toks, over, done = jax.device_get((
+            self.state.seq_id, self.state.active, self.state.n_out,
+            self.state.out_toks, self.state.overflowed,
+            self.state.done_step,
+        ))
+        lanes = np.nonzero((seq >= 0) & ~act)[0]
+        # deterministic retirement order: by retire step, then lane id
+        lanes = sorted(lanes, key=lambda i: (int(done[i]), int(i)))
+        drained = []
+        for lane in lanes:
+            sid = int(seq[lane])
+            req = self.running.pop(sid)
+            self._lane_of.pop(sid)
+            req.out_tokens = [int(t) for t in out_toks[lane, : n_out[lane]]]
+            req.done = True
+            self.completed[sid] = req
+            self.done_steps[sid] = int(done[lane])
+            self.retired_order.append(sid)
+            if over[lane]:
+                self.stats["overflow_retired"] += 1
+            drained.append(sid)
+        if drained:
+            mask = np.zeros((self.ecfg.max_batch,), bool)
+            mask[list(lanes)] = True
+            self.state = clear_lanes(
+                self.ecfg, self.state, jnp.asarray(mask)
+            )
+        return drained
+
+    # -- ServeEngine-compatible surface --------------------------------
+    def step(self) -> int:
+        """Drain + admit + one compiled decode step.  Returns the
+        number of running sequences (this *is* a host sync — use
+        `decode_steps` for the no-sync hot loop)."""
+        self._drain()
+        self._admit()
+        if not self.running:
+            return 0
+        self.decode_steps(1)
+        return int(np.asarray(self.state.active).sum())
+
+    def run_to_completion(
+        self, max_steps: int = 10_000, chunk: int = 1
+    ) -> None:
+        steps = 0
+        while steps < max_steps:
+            self._drain()
+            self._admit()
+            if not self.running and not self.waiting:
+                return
+            if not self.running:  # waiting but pool full of nothing??
+                break
+            n = min(chunk, max_steps - steps)
+            self.decode_steps(n, fused=chunk > 1)
+            steps += n
+
+    # -- observability -------------------------------------------------
+    def stat_totals(self) -> Dict[str, int]:
+        """Sync and return the accumulated EngineStepStats counters."""
+        vals = jax.device_get(self.acc)
+        return {f: int(v) for f, v in zip(EngineStepStats._fields, vals)}
+
+    def device_free_pages(self) -> int:
+        return int(
+            pool_free_units(self.ecfg.pool_config(), self.state.trees).sum()
+        )
+
+    def device_block_table(self, seq_id: int) -> np.ndarray:
+        """Global-page-id table of one running sequence (debug/test
+        sync; mirrors `PagedKVManager.block_table` numbering)."""
+        lane = self._lane_of[seq_id]
+        tables = global_tables(
+            self.ecfg, self.state.page_shard, self.state.page_off
+        )
+        return np.asarray(tables[lane])

@@ -13,10 +13,19 @@ produced by `memory.PagedKVManager` (buddy runs).  Each decode step:
 
 Per-sequence context lengths make this the continuous-batching step:
 sequences at different positions decode together in one jitted call.
+
+The step accepts an optional `active` lane mask so it can run at a
+*static* batch width inside the jit-resident engine (docs/design.md
+§8): inactive lanes contribute nothing — their K/V scatter is dropped
+(the page index is redirected out of bounds and the scatter uses
+``mode="drop"``) and their attention context is forced to zero, so the
+kernel skips every page and emits zeros.  With `active=None` the
+behavior is exactly the historical all-lanes-live step.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -27,9 +36,18 @@ from repro.kernels import ops
 from repro.models import moe as moe_lib
 from repro.models.attention import apply_rope
 from repro.models.layers import apply_swiglu, embed, logits as lm_logits, rms_norm
-from repro.models.transformer import window_array
+from repro.models.transformer import prefill, window_array
 
 Array = jax.Array
+
+
+@functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("max_len", "dtype")
+)
+def serve_prefill(cfg: ArchConfig, params, batch, *, max_len, dtype):
+    """Jitted prefill for the serving engines (one compile per prompt
+    bucket — both engines pad prompts to a bounded set of lengths)."""
+    return prefill(cfg, params, batch, max_len, dtype=dtype)
 
 
 def init_pool(
@@ -39,6 +57,11 @@ def init_pool(
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+@functools.partial(
+    jax.jit,
+    static_argnums=(0,),
+    static_argnames=("page_tokens", "impl", "dtype"),
+)
 def paged_decode_step(
     cfg: ArchConfig,
     params: dict,
@@ -50,19 +73,28 @@ def paged_decode_step(
     page_tokens: int,
     impl: str = "auto",
     dtype=jnp.bfloat16,
+    active: Array | None = None,  # bool[B]; None = all lanes live
 ) -> Tuple[Array, dict]:
     """Returns (logits [B, V], updated pool). Dense-family archs only."""
     assert cfg.family in ("dense", "moe", "vlm", "audio"), cfg.family
     B = tokens.shape[0]
+    P = pool["k"].shape[1]
+    if active is None:
+        active = jnp.ones((B,), dtype=bool)
     x = embed(params["embed"], tokens[:, None], dtype, scale=cfg.embed_scale)
     positions = context_lens[:, None]  # this token's position per seq
     windows = window_array(cfg)
 
-    # page/slot of the new token per sequence
-    page_idx = block_tables[
+    # page/slot of the new token per sequence; lanes that are inactive
+    # (or whose table has no page mapped at this position) are steered
+    # to the out-of-bounds page P so the scatter drops their write
+    # instead of aliasing page 0 / the last page
+    page_raw = block_tables[
         jnp.arange(B), context_lens // page_tokens
     ]  # [B]
+    page_idx = jnp.where(active & (page_raw >= 0), page_raw, P)
     slot = context_lens % page_tokens
+    ctx_att = jnp.where(active, context_lens + 1, 0)
 
     new_k, new_v = [], []
 
@@ -80,15 +112,16 @@ def paged_decode_step(
         )
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-        # scatter this token's K/V into its page
-        kp = kp.at[page_idx, slot].set(k[:, 0])
-        vp = vp.at[page_idx, slot].set(v[:, 0])
+        # scatter this token's K/V into its page (inactive lanes were
+        # redirected to the OOB page above and are dropped here)
+        kp = kp.at[page_idx, slot].set(k[:, 0], mode="drop")
+        vp = vp.at[page_idx, slot].set(v[:, 0], mode="drop")
         o = ops.paged_attention(
             q[:, 0],
             kp,
             vp,
             block_tables,
-            context_lens + 1,
+            ctx_att,
             softcap=cfg.attn_softcap or None,
             impl=impl,
         )

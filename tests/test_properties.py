@@ -387,3 +387,61 @@ def test_device_layouts_and_bunch_buddy_agree_on_any_trace(ops):
     assert (np.asarray(tu) == 0).all()
     assert (np.asarray(tp) == 0).all()
     assert bb.free_bytes() == total
+
+
+# ---------------------------------------------------------------------------
+# Jit-resident engine vs host oracle (docs/design.md §8)
+# ---------------------------------------------------------------------------
+
+_ENGINE_CACHE = {}
+
+
+def _jit_engine_fixture():
+    """One (cfg, params) pair per session; geometry is fixed so every
+    hypothesis example reuses the same compiled engine_step."""
+    if "v" not in _ENGINE_CACHE:
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import init_params
+
+        cfg = get_config("stablelm-3b").reduced()
+        _ENGINE_CACHE["v"] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+    return _ENGINE_CACHE["v"]
+
+
+@given(
+    st.lists(
+        st.tuples(st.integers(1, 12), st.integers(1, 6)),
+        min_size=1,
+        max_size=8,
+    )
+)
+@settings(max_examples=10, deadline=None)
+def test_jit_engine_matches_host_oracle(trace):
+    """Property form of the differential contract: for any trace of
+    (prompt_len, max_new) pairs, the compiled engine and the host-driven
+    oracle replay agree on retirement order, retirement steps, and final
+    pool occupancy.  Token values are irrelevant by construction
+    (eos=None), so prompts are constant."""
+    from repro.serve.engine import Request
+    from repro.serve.jit_engine import JitServeEngine
+    from repro.serve.oracle import HostOracleEngine
+
+    cfg, params = _jit_engine_fixture()
+    geom = dict(num_pages=16, page_tokens=4, max_batch=4,
+                max_lane_pages=8, max_out=8, n_shards=2)
+    eng = JitServeEngine(cfg, params, dtype=jnp.float32, **geom)
+    orc = HostOracleEngine(**geom)
+    for i, (S, mn) in enumerate(trace):
+        p = np.ones(S, np.int32)
+        eng.submit(Request(i, p, mn))
+        orc.submit(Request(i, p.copy(), mn))
+    eng.run_to_completion(max_steps=400)
+    orc.run_to_completion(max_steps=400)
+    assert eng.retired_order == orc.retired_order
+    assert eng.done_steps == orc.done_steps
+    assert len(eng.completed) == len(orc.completed) == len(trace)
+    assert eng.stats == orc.stats
+    assert eng.device_free_pages() == orc.free_pages() == 16
+    orc.pool.check_invariants()
