@@ -5,10 +5,18 @@ skewed towards small chunks (more allocations at smaller sizes), then
 performs OPS random deallocate-reallocate pairs at the *same* size —
 keeping the occupancy factor of the buddy system constant while
 exercising splits/merges at many levels.
+
+The fastpath sweep runs the same constant-occupancy churn at the fast
+octave with the bitmap-slab front end (core/fastpath.py) on and off:
+with the slab serving the churn, merged tree writes per op drop
+strictly below the buddy-climb baseline and logical RMWs approach the
+O(1) claim's 1/op.  Full runs write BENCH_FASTPATH.json; `BENCH_FAST=1`
+shrinks everything for the CI smoke job and skips the JSON writes.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -24,13 +32,16 @@ from benchmarks.common import (
     row,
 )
 from repro.core.concurrent import TreeConfig
+from repro.core.fastpath import FastPathConfig
 from repro.core.pool import PoolConfig, pool_wavefront_step
 
-TOTAL_MEM = 1 << 19
+FAST = os.environ.get("BENCH_FAST") == "1"
+
+TOTAL_MEM = (1 << 15) if FAST else (1 << 19)
 MIN_SIZE = 8
 # skewed pool: many small, few large (paper: min sizes 8..1024, max 16x)
 POOL_SPEC = [(8, 128), (16, 64), (32, 32), (64, 16), (128, 8), (1024, 4)]
-OPS = 20_000
+OPS = 2_000 if FAST else 20_000
 
 
 def run() -> None:
@@ -83,9 +94,9 @@ def run() -> None:
     # equal total capacity for every S.  Reports rounds per churn step
     # and the per-shard merged-vs-logical release ratio (Fig. 7 metric,
     # release side, extended to the pool).
-    TOTAL_DEPTH = 12            # 4096 units, constant across S
+    TOTAL_DEPTH = 10 if FAST else 12  # units constant across S
     W = 64                      # churn burst width
-    CHURN_STEPS = 12
+    CHURN_STEPS = 3 if FAST else 12
     shard_records = []
     for S in (1, 2, 4, 8):
         sd = TOTAL_DEPTH - (S.bit_length() - 1)
@@ -140,9 +151,97 @@ def run() -> None:
             "merged pool release must beat per-free RMWs",
             merged_total, logical_total,
         )
-    dump_bench_json(
-        "BENCH_CONSTANT_OCCUPANCY_SHARDS.json", shard_records
-    )
+    if not FAST:
+        dump_bench_json(
+            "BENCH_CONSTANT_OCCUPANCY_SHARDS.json", shard_records
+        )
+
+    fastpath_sweep()
+
+
+def fastpath_sweep() -> None:
+    """Fast-octave constant-occupancy churn, slab front end on vs off.
+
+    W leaf pages are freed and re-allocated each mixed pool step.  With
+    the fastpath on, steady-state churn is slab claims/releases — one
+    logical RMW per alloc and a couple of merged bitmap-word writes per
+    burst — instead of O(depth) buddy climbs.  The JSON records both
+    modes so the climb baseline is always alongside."""
+    DEPTH = 6 if FAST else 8
+    CHURN = 3 if FAST else 16
+    records = []
+    for S in (1, 4):
+        per_mode = {}
+        for use_fp in (False, True):
+            fp = FastPathConfig(level=None, slab_level=2) if use_fp else None
+            pcfg = PoolConfig(TreeConfig(depth=DEPTH), S, fastpath=fp)
+            W = (S << DEPTH) // 8  # churn width: fits every shard's slab
+            levels = jnp.full(W, DEPTH, jnp.int32)
+            active = jnp.ones(W, bool)
+            zeros = jnp.zeros(W, jnp.int32)
+            trees = pcfg.empty_trees()
+            trees, nodes, shard, ok, _ = pool_wavefront_step(
+                pcfg, trees, zeros, zeros, jnp.zeros(W, bool), levels,
+                active,
+            )
+            assert bool(ok.all())
+            jax.block_until_ready(trees)
+            tot = {"merged": 0, "logical": 0, "free_merged": 0,
+                   "free_logical": 0, "hits": 0, "spills": 0}
+            t0 = time.perf_counter()
+            for _ in range(CHURN):
+                trees, nodes, shard, ok, stats = pool_wavefront_step(
+                    pcfg, trees, nodes, shard, ok, levels, active,
+                )
+                tot["merged"] += int(stats["merged_writes"])
+                tot["logical"] += int(stats["logical_rmws"])
+                tot["free_merged"] += int(stats["free_merged_writes"])
+                tot["free_logical"] += int(stats["free_logical_rmws"])
+                tot["hits"] += int(stats["fastpath_hits"])
+                tot["spills"] += int(stats["fastpath_spills"])
+            jax.block_until_ready(trees)
+            dt = time.perf_counter() - t0
+            assert bool(ok.all())
+            ops = CHURN * W  # alloc ops (each paired with one free)
+            rec = {
+                "n_shards": S,
+                "fastpath": use_fp,
+                "depth": DEPTH,
+                "width": W,
+                "churn_steps": CHURN,
+                "merged_writes": tot["merged"],
+                "logical_rmws": tot["logical"],
+                "free_merged_writes": tot["free_merged"],
+                "free_logical_rmws": tot["free_logical"],
+                "fastpath_hits": tot["hits"],
+                "fastpath_spills": tot["spills"],
+                "merged_per_op": (
+                    (tot["merged"] + tot["free_merged"]) / ops
+                ),
+                "logical_per_alloc": tot["logical"] / ops,
+                "seconds": dt,
+            }
+            per_mode[use_fp] = rec
+            records.append(rec)
+            row(
+                "constant_occupancy_fastpath",
+                f"pool-s{S}-{'slab' if use_fp else 'climb'}", W, 2 * ops,
+                dt,
+                extra=(
+                    f"merged/op={rec['merged_per_op']:.3f};"
+                    f"logical/alloc={rec['logical_per_alloc']:.3f};"
+                    f"hits={tot['hits']};spills={tot['spills']}"
+                ),
+            )
+        # the tentpole claim: slab churn merges strictly fewer writes
+        # per op than the buddy-climb baseline, at ~1 logical RMW/alloc
+        assert (
+            per_mode[True]["merged_per_op"]
+            < per_mode[False]["merged_per_op"]
+        ), per_mode
+        assert per_mode[True]["fastpath_hits"] > 0
+    if not FAST:
+        dump_bench_json("BENCH_FASTPATH.json", records)
 
 
 if __name__ == "__main__":

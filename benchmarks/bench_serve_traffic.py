@@ -106,12 +106,13 @@ def steady_toks_per_s(trajectory, n_requests) -> float | None:
     return (hi["tokens_done"] - lo["tokens_done"]) / (hi["t"] - lo["t"])
 
 
-def run_jit(cfg, params, trace, prompts, n_shards, layout) -> dict:
+def run_jit(cfg, params, trace, prompts, n_shards, layout,
+            fastpath=False) -> dict:
     eng = JitServeEngine(
         cfg, params, num_pages=NUM_PAGES, page_tokens=PAGE_TOKENS,
         max_batch=MAX_BATCH, max_lane_pages=MAX_LANE_PAGES,
         max_out=MAX_OUT, dtype=jnp.float32, n_shards=n_shards,
-        layout=layout,
+        layout=layout, fastpath=fastpath,
     )
     pending = deque(trace)
     arrival = {t.req_id: t.arrival_step for t in trace}
@@ -154,6 +155,7 @@ def run_jit(cfg, params, trace, prompts, n_shards, layout) -> dict:
         "engine": "jit",
         "layout": layout,
         "n_shards": n_shards,
+        "fastpath": fastpath,
         "n_requests": len(trace),
         "max_batch": MAX_BATCH,
         "num_pages": NUM_PAGES,
@@ -177,16 +179,21 @@ def run_jit(cfg, params, trace, prompts, n_shards, layout) -> dict:
         "merged_writes_per_alloc": (
             tot["merged_writes"] / max(tot["alloc_pages"], 1)
         ),
+        "fastpath_hits": tot["fastpath_hits"],
+        "fastpath_spills": tot["fastpath_spills"],
         "free_pages_final": eng.device_free_pages(),
         "trajectory": trajectory,
     }
+    tag = f"jit-{layout}-S{n_shards}" + ("-fp" if fastpath else "")
     row(
-        "serve_traffic", f"jit-{layout}-S{n_shards}", MAX_BATCH, toks, wall,
+        "serve_traffic", tag, MAX_BATCH, toks, wall,
         extra=(
             f"steady={rec['steady_toks_per_s']};"
             f"p50={q['p50']};p99={q['p99']};"
             f"queued_full={eng.stats['queued_full']};"
-            f"overflow={eng.stats['overflow_retired']}"
+            f"overflow={eng.stats['overflow_retired']};"
+            f"fp_hits={tot['fastpath_hits']};"
+            f"fp_spills={tot['fastpath_spills']}"
         ),
     )
     return rec
@@ -242,6 +249,7 @@ def run_host(cfg, params, trace, prompts, n_shards) -> dict:
         "engine": "host",
         "layout": "unpacked",
         "n_shards": n_shards,
+        "fastpath": False,
         "n_requests": len(trace),
         "max_batch": MAX_BATCH,
         "num_pages": NUM_PAGES,
@@ -259,6 +267,8 @@ def run_host(cfg, params, trace, prompts, n_shards) -> dict:
         "queued_full": eng.stats["queued_full"],
         "rejected": eng.stats["rejected"],
         "overflow_retired": 0,
+        "fastpath_hits": eng.kv.fastpath_hits,
+        "fastpath_spills": eng.kv.fastpath_spills,
         "free_pages_final": eng.kv.free_pages(),
         "trajectory": trajectory,
     }
@@ -275,13 +285,16 @@ def _run_single(spec: str, out_path: str) -> None:
     """Worker mode: one engine run in a fresh process (each full-scale
     run compiles sizeable executables; process isolation keeps every
     configuration's compile + pool memory independent)."""
-    engine, layout, n_shards = spec.split(":")
+    engine, layout, n_shards, fastpath = spec.split(":")
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     trace = _trace()
     prompts = _prompts(trace, cfg.vocab_size)
     if engine == "jit":
-        rec = run_jit(cfg, params, trace, prompts, int(n_shards), layout)
+        rec = run_jit(
+            cfg, params, trace, prompts, int(n_shards), layout,
+            fastpath=fastpath == "1",
+        )
     else:
         rec = run_host(cfg, params, trace, prompts, int(n_shards))
     with open(out_path, "w") as f:
@@ -292,8 +305,11 @@ def run() -> None:
     specs = []
     for n_shards in SHARDS:
         for layout in LAYOUTS:
-            specs.append(f"jit:{layout}:{n_shards}")
-        specs.append(f"host:unpacked:{n_shards}")
+            specs.append(f"jit:{layout}:{n_shards}:0")
+        # the slab front end rides the first layout (page churn is
+        # layout-agnostic: the slab words sit outside the tree words)
+        specs.append(f"jit:{LAYOUTS[0]}:{n_shards}:1")
+        specs.append(f"host:unpacked:{n_shards}:0")
 
     records = []
     with tempfile.TemporaryDirectory() as td:

@@ -8,6 +8,7 @@ Modules:
   concurrent  — batched wavefront allocator (jnp, jittable; kernel oracle)
   nbbs_jax    — single-op in-graph API on top of the wavefront
   pool        — sharded multi-tree pool (replicated trees + overflow routing)
+  fastpath    — fixed-size bitmap-slab front end carved out of the tree
   bunch       — packed-word multi-level variant (paper §III-D, host)
   layout      — device tree-state layouts: Unpacked / BunchPacked (§III-D)
 """
@@ -29,6 +30,7 @@ from repro.core.concurrent import (  # noqa: F401
     wavefront_free,
     wavefront_step,
 )
+from repro.core.fastpath import FastPathConfig  # noqa: F401
 from repro.core.nbbs_jax import (  # noqa: F401
     AllocState,
     PoolAllocState,

@@ -1,0 +1,263 @@
+"""Fixed-size fast path: a bitmap slab carved out of each buddy tree.
+
+Decode-time appends are overwhelmingly single-page allocations of one
+fixed octave, yet each one pays the paper's full O(depth/B) TRYALLOC
+climb.  Blelloch & Wei (arXiv 2008.04296) show fixed-size concurrent
+alloc/free is achievable in O(1) RMWs, and scalloc (arXiv 1503.09006)
+demonstrates that a cheap size-class front end over a global structure
+is where multicore allocators actually win — exactly the "combinable
+with layered services" positioning of the source paper's abstract.
+
+This module is that front end for the wavefront substrate
+(docs/design.md §9):
+
+  * at `PoolConfig` init one subtree — the *leftmost* node at
+    `slab_level` — is carved out of each shard's buddy tree by
+    committing it as allocated through the ordinary layout machinery
+    (`layout.commit_allocs` on the empty tree).  The tree side can
+    therefore never hand out a page under the carve: the mutual-
+    exclusion argument is the tree's own S1 invariant, not new code;
+  * the carved subtree's blocks at the *fast octave* (`level`,
+    defaulting to the leaf level) are tracked by a bitmap slab — one
+    bit per block, packed into words appended to the shard's tree row,
+    so the pool state stays one `[S, n_state_words]` array and the
+    Pallas kernel keeps the slab VMEM-resident next to the tree;
+  * claim is a single RMW: rank the wanting lanes (cumsum), assign
+    free slots in find-first-zero order (searchsorted over the free
+    prefix sums — the same conflict-free tentative-assignment style as
+    `alloc_round`, with no arbitration needed because distinct ranks
+    map to distinct slots), OR the claimed bits in with one scatter;
+  * release is a single RMW: validity = in-range AND bit currently
+    set, duplicate handles in one burst deduplicated by min-lane-id
+    exactly like `free_round`, then one AND-NOT scatter.
+
+Handles stay path-agnostic: a slab block is addressed by its ordinary
+buddy node index (the slab slots ARE the leftmost `level`-octave nodes
+of the tree), so frees route purely by node range and
+`free(alloc(x))` round-trips through whichever path served it.
+
+Because the slab covers the leftmost blocks and claims assign slots in
+index order — the same order `alloc_round`'s rank assignment walks
+free nodes — a pure fast-octave workload is served *address-identical*
+to an uncarved pool; mixed-octave workloads keep identical
+capacity/failure semantics (tests/test_fastpath.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.concurrent import TreeConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FastPathConfig:
+    """Static geometry of the fixed-size front end.
+
+    `level` is the fast octave (tree level whose blocks the slab
+    serves); None means the leaf level (single pages — the decode-
+    append octave).  `slab_level` picks the carve: the leftmost node at
+    that level is reserved for the slab, i.e. a 1/2^slab_level fraction
+    of each shard's capacity."""
+
+    level: int | None = None
+    slab_level: int = 2
+
+    def validate(self, cfg: TreeConfig) -> None:
+        lv = self.resolved_level(cfg)
+        if not (1 <= self.slab_level <= lv <= cfg.depth):
+            raise ValueError(
+                "fastpath needs 1 <= slab_level <= level <= depth, got "
+                f"slab_level={self.slab_level} level={lv} depth={cfg.depth}"
+            )
+        if self.slab_level < cfg.max_level:
+            raise ValueError(
+                "fastpath slab_level must be >= tree max_level "
+                f"({self.slab_level} < {cfg.max_level})"
+            )
+
+    def resolved_level(self, cfg: TreeConfig) -> int:
+        return cfg.depth if self.level is None else self.level
+
+
+# ---------------------------------------------------------------------------
+# Static geometry helpers (python ints — safe inside Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def fp_level(cfg: TreeConfig, fp: FastPathConfig) -> int:
+    return fp.resolved_level(cfg)
+
+
+def fp_carve_node(fp: FastPathConfig) -> int:
+    """The reserved subtree root: leftmost node at slab_level."""
+    return 1 << fp.slab_level
+
+
+def fp_n_slots(cfg: TreeConfig, fp: FastPathConfig) -> int:
+    """Fast-octave blocks under the carve (slab bitmap width)."""
+    return 1 << (fp_level(cfg, fp) - fp.slab_level)
+
+
+def fp_node_base(cfg: TreeConfig, fp: FastPathConfig) -> int:
+    """Node index of slab slot 0 (slots are nodes base..base+n_slots)."""
+    return 1 << fp_level(cfg, fp)
+
+
+def fp_units_per_slot(cfg: TreeConfig, fp: FastPathConfig) -> int:
+    return 1 << (cfg.depth - fp_level(cfg, fp))
+
+
+def fp_state_words(cfg: TreeConfig, fp: FastPathConfig) -> int:
+    """Slab bitmap words appended to each shard's tree-state row."""
+    return (fp_n_slots(cfg, fp) + 31) // 32
+
+
+def carved_empty_tree(cfg: TreeConfig, fp: FastPathConfig) -> Array:
+    """Empty tree state with the slab's subtree pre-marked allocated.
+
+    Written through `layout.commit_allocs` so the carve is the layout's
+    own canonical "this node is allocated" state — `allocatable` then
+    excludes every block under it for free, in both layouts."""
+    win = jnp.zeros(cfg.n_words, bool).at[fp_carve_node(fp)].set(True)
+    tree, _ = cfg.layout.commit_allocs(cfg, cfg.empty_tree(), win)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Node-range routing masks (frees route by address range)
+# ---------------------------------------------------------------------------
+
+
+def in_slab_leaf(cfg: TreeConfig, fp: FastPathConfig, nodes: Array) -> Array:
+    """bool[K]: node is a slab slot (fast-octave block under the carve)."""
+    base = fp_node_base(cfg, fp)
+    return (nodes >= base) & (nodes < base + fp_n_slots(cfg, fp))
+
+
+def in_carved_junk(cfg: TreeConfig, fp: FastPathConfig, nodes: Array) -> Array:
+    """bool[K]: node is inside or on the path to the carved subtree but
+    is NOT a slab slot.  Such handles can never have been returned by
+    either allocator — a tree-side free of one could merge the slab's
+    reservation away, so the pool drops them outright."""
+    n = jnp.clip(nodes, 1, cfg.n_words - 1).astype(jnp.int32)
+    lev = 31 - lax.clz(n)
+    carve = fp_carve_node(fp)
+    # inside the carved subtree: ancestor at slab_level == carve node
+    inside = (lev >= fp.slab_level) & (
+        (n >> jnp.maximum(lev - fp.slab_level, 0)) == carve
+    )
+    # on the root->carve path: the leftmost node of each shallower level
+    on_path = (lev < fp.slab_level) & (n == (1 << lev).astype(jnp.int32))
+    in_range = (nodes >= 1) & (nodes < cfg.n_words)
+    return in_range & (inside | on_path) & ~in_slab_leaf(cfg, fp, nodes)
+
+
+# ---------------------------------------------------------------------------
+# Slab bitmap claim / release (single-RMW per op, whole burst merged)
+# ---------------------------------------------------------------------------
+
+
+def _slab_occ(cfg: TreeConfig, fp: FastPathConfig, slab: Array) -> Array:
+    """bool[n_slots]: slot occupied (bit set)."""
+    u = slab.astype(jnp.uint32)
+    idx = jnp.arange(fp_n_slots(cfg, fp), dtype=jnp.int32)
+    return ((u[idx >> 5] >> (idx & 31).astype(jnp.uint32)) & 1) != 0
+
+
+def slab_claim(
+    cfg: TreeConfig, fp: FastPathConfig, slab: Array, want: Array
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """Claim one fast-octave block per wanting lane from the slab.
+
+    Rank/prefix-sum tentative assignment in find-first-zero order —
+    the bitmap analogue of `alloc_round`'s per-level pass, except no
+    min-id arbitration is needed: distinct ranks map to distinct free
+    slots, so every selected lane wins.  All claimed bits commit with
+    ONE scatter into the slab words (the merged single-RMW claim).
+
+    Returns (slab, nodes, got, merged_writes, hits)."""
+    occ = _slab_occ(cfg, fp, slab)
+    free = ~occ
+    cnt = free.sum(dtype=jnp.int32)
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    slot = jnp.searchsorted(csum, rank + 1, side="left").astype(jnp.int32)
+    sel = want & (rank < cnt)
+    slot = jnp.where(sel, slot, 0)
+    u = slab.astype(jnp.uint32)
+    contrib = jnp.where(
+        sel, jnp.uint32(1) << (slot & 31).astype(jnp.uint32), jnp.uint32(0)
+    )
+    new = u.at[slot >> 5].add(contrib)  # distinct slots: add == OR
+    merged = (new != u).sum(dtype=jnp.int32)
+    nodes = jnp.where(sel, fp_node_base(cfg, fp) + slot, 0)
+    return (
+        new.astype(slab.dtype),
+        nodes,
+        sel,
+        merged,
+        sel.sum(dtype=jnp.int32),
+    )
+
+
+def slab_release(
+    cfg: TreeConfig, fp: FastPathConfig, slab: Array, nodes: Array,
+    active: Array,
+) -> Tuple[Array, Array, Array, Array]:
+    """Release a burst of slab handles: validity = in-range AND bit
+    currently set; duplicate handles in the burst deduplicated by
+    min-lane-id (same rule as `free_round`); all cleared bits commit
+    with ONE AND-NOT scatter.
+
+    Returns (slab, freed, merged_writes, logical_rmws)."""
+    K = nodes.shape[0]
+    base = fp_node_base(cfg, fp)
+    n_slots = fp_n_slots(cfg, fp)
+    nodes = nodes.astype(jnp.int32)
+    in_r = active & (nodes >= base) & (nodes < base + n_slots)
+    slot = jnp.where(in_r, nodes - base, 0)
+    occ = _slab_occ(cfg, fp, slab)
+    valid = in_r & occ[slot]
+    ids = jnp.arange(K, dtype=jnp.int32)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    own = jnp.full(n_slots, big, jnp.int32).at[slot].min(
+        jnp.where(valid, ids, big)
+    )
+    valid = valid & (own[slot] == ids)
+    u = slab.astype(jnp.uint32)
+    contrib = jnp.where(
+        valid, jnp.uint32(1) << (slot & 31).astype(jnp.uint32), jnp.uint32(0)
+    )
+    mask = jnp.zeros_like(u).at[slot >> 5].add(contrib)
+    new = u & ~mask
+    merged = (new != u).sum(dtype=jnp.int32)
+    return (
+        new.astype(slab.dtype),
+        valid,
+        merged,
+        valid.sum(dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Occupancy introspection (rides along in the engine's in-graph stats)
+# ---------------------------------------------------------------------------
+
+
+def slab_free_slots(cfg: TreeConfig, fp: FastPathConfig, slab: Array) -> Array:
+    """int32 scalar: free fast-octave blocks in the slab."""
+    return (~_slab_occ(cfg, fp, slab)).sum(dtype=jnp.int32)
+
+
+def slab_free_units(cfg: TreeConfig, fp: FastPathConfig, slab: Array) -> Array:
+    return slab_free_slots(cfg, fp, slab) * jnp.int32(
+        fp_units_per_slot(cfg, fp)
+    )

@@ -235,7 +235,13 @@ def nb_pool_alloc_pages(
 
     Returns (trees, shard int32[K], unit_offset int32[K], ok bool[K],
     stats).  The (shard, offset) pair is the page handle; no index[] is
-    needed because a leaf's node is always 2^depth + offset."""
+    needed because a leaf's node is always 2^depth + offset.
+
+    With `pcfg.fastpath` set, each lane's probe first tries the O(1)
+    slab claim on its current shard and only spills into the buddy
+    climb when the slab is exhausted (core/fastpath.py); handles are
+    path-agnostic — a slab page's node is the same leaf node — and
+    stats carry 'fastpath_hits'/'fastpath_spills'."""
     K = active.shape[0]
     levels = jnp.full((K,), pcfg.tree.depth, dtype=jnp.int32)
     trees, nodes, shard, ok, stats = pool_wavefront_alloc(
@@ -262,6 +268,11 @@ def nb_pool_free_pages(
     whose leaf lacks OCC is dropped by `free_round`'s validity mask —
     identical semantics to `nb_pool_free_batch`, minus the index[]
     lookup that leaf-only pools don't need.
+
+    With `pcfg.fastpath` set, frees route by address range inside
+    `pool_free_round`: offsets under the slab release through its
+    bitmap, the rest through the merged buddy pass — callers never
+    track which path served a page.
 
     Returns (trees, freed bool[K], stats)."""
     shards = shards.astype(jnp.int32)

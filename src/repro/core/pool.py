@@ -59,22 +59,33 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import fastpath as fpmod
 from repro.core.bits import FIB_HASH
 from repro.core.concurrent import TreeConfig, alloc_round, free_round
+from repro.core.fastpath import FastPathConfig
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
-    """Static geometry of the sharded pool: S replicas of one tree."""
+    """Static geometry of the sharded pool: S replicas of one tree.
+
+    `fastpath`, when set, carves the leftmost `slab_level` subtree out
+    of every shard's tree for a bitmap slab of fast-octave blocks
+    (core/fastpath.py, docs/design.md §9); the slab's bitmap words are
+    appended to each shard's state row so the pool remains one stacked
+    `[S, n_state_words]` array."""
 
     tree: TreeConfig
     n_shards: int = 1
+    fastpath: FastPathConfig | None = None
 
     def __post_init__(self):
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if self.fastpath is not None:
+            self.fastpath.validate(self.tree)
 
     @property
     def n_words(self) -> int:
@@ -82,18 +93,35 @@ class PoolConfig:
         return self.tree.n_words
 
     @property
+    def fp_state_words(self) -> int:
+        """Slab bitmap words per shard (0 without a fastpath)."""
+        if self.fastpath is None:
+            return 0
+        return fpmod.fp_state_words(self.tree, self.fastpath)
+
+    @property
     def n_state_words(self) -> int:
-        """Per-shard persistent state words of the configured layout."""
-        return self.tree.n_state_words
+        """Per-shard persistent state words of the configured layout,
+        plus the appended fastpath slab bitmap words when enabled."""
+        return self.tree.n_state_words + self.fp_state_words
 
     @property
     def total_units(self) -> int:
         return self.n_shards << self.tree.depth
 
     def empty_trees(self) -> Array:
-        return jnp.zeros(
-            (self.n_shards, self.n_state_words), dtype=self.tree.state_dtype
+        if self.fastpath is None:
+            return jnp.zeros(
+                (self.n_shards, self.n_state_words),
+                dtype=self.tree.state_dtype,
+            )
+        # the carve is committed through the layout's own alloc pass, so
+        # `allocatable` excludes the slab's subtree with zero new code
+        tree = fpmod.carved_empty_tree(self.tree, self.fastpath)
+        row = jnp.concatenate(
+            [tree, jnp.zeros(self.fp_state_words, tree.dtype)]
         )
+        return jnp.tile(row[None, :], (self.n_shards, 1))
 
 
 def home_shard(pcfg: PoolConfig, lane_ids: Array) -> Array:
@@ -129,20 +157,58 @@ def pool_alloc_round(
     order.  Lanes that merely lost arbitration stay on their shard and
     retry, exactly like the single tree.
 
-    Returns (trees, nodes, pending, shard, attempt, merged, logical, won).
+    With a fastpath configured, lanes requesting the fast octave first
+    probe their current shard's slab bitmap (single-RMW claim, no
+    arbitration); only the spill — slab exhausted or a different
+    octave — enters the buddy round.  Probing the *current* shard each
+    round (not just the home shard) keeps overflow semantics identical
+    to a slab-free pool: a re-routed lane sees the probed shard's slab
+    exactly as it would see its leftmost free blocks.
+
+    Returns (trees, nodes, pending, shard, attempt, merged, logical,
+    won, fp_hits).
     """
     S = pcfg.n_shards
     K = levels.shape[0]
+    fp = pcfg.fastpath
     sh_ids = jnp.arange(S, dtype=jnp.int32)
     lane_mask = shard[None, :] == sh_ids[:, None]        # [S, K]
+
+    fp_hits = jnp.int32(0)
+    fp_merged = jnp.int32(0)
+    got_fp = jnp.zeros(K, bool)
+    TW = pcfg.tree.n_state_words
+    if fp is not None:
+        tree_part, slab_part = trees[:, :TW], trees[:, TW:]
+        eligible = pending & (levels == fpmod.fp_level(pcfg.tree, fp))
+        want_s = eligible[None, :] & lane_mask
+        claim = jax.vmap(
+            functools.partial(fpmod.slab_claim, pcfg.tree, fp),
+            in_axes=(0, 0),
+        )
+        slab_part, nodes_fp_s, got_s, merged_fp_s, hits_s = claim(
+            slab_part, want_s
+        )
+        got_fp = got_s.any(axis=0)
+        nodes = jnp.where(got_fp, (nodes_fp_s * got_s).sum(axis=0), nodes)
+        pending = pending & ~got_fp
+        fp_hits = hits_s.sum(dtype=jnp.int32)
+        fp_merged = merged_fp_s.sum(dtype=jnp.int32)
+    else:
+        tree_part, slab_part = trees, trees[:, TW:]
     sh_pending = pending[None, :] & lane_mask
 
     rnd = jax.vmap(
         functools.partial(alloc_round, pcfg.tree),
         in_axes=(0, None, 0, None),
     )
-    trees, nodes_s, pending_s, merged_s, logical_s, won_s = rnd(
-        trees, levels, sh_pending, jnp.zeros((K,), jnp.int32)
+    tree_part, nodes_s, pending_s, merged_s, logical_s, won_s = rnd(
+        tree_part, levels, sh_pending, jnp.zeros((K,), jnp.int32)
+    )
+    trees = (
+        jnp.concatenate([tree_part, slab_part], axis=1)
+        if fp is not None
+        else tree_part
     )
 
     won = won_s.any(axis=0)          # a lane is pending on exactly one shard
@@ -163,9 +229,10 @@ def pool_alloc_round(
         pending,
         shard,
         attempt,
-        merged_s.sum(dtype=jnp.int32),
-        logical_s.sum(dtype=jnp.int32),
-        won,
+        merged_s.sum(dtype=jnp.int32) + fp_merged,
+        logical_s.sum(dtype=jnp.int32) + fp_hits,
+        won | got_fp,
+        fp_hits,
     )
 
 
@@ -196,7 +263,9 @@ def pool_wavefront_alloc(
       (trees, nodes, shard, ok, stats) — nodes int32[K] (0 where
       failed/inactive), shard int32[K] the serving shard of each lane
       (its handle is the pair), ok bool[K]; stats adds 'overflows' (lanes
-      served off their home shard) to the single-tree counters.
+      served off their home shard) plus 'fastpath_hits'/'fastpath_spills'
+      (fast-octave lanes served by the slab vs not; both zero without a
+      fastpath) to the single-tree counters.
     """
     K = levels.shape[0]
     if lane_ids is None:
@@ -204,17 +273,18 @@ def pool_wavefront_alloc(
     home = home_shard(pcfg, lane_ids)
 
     def round_body(carry):
-        trees, nodes, pending, shard, attempt, rounds, merged, logical = carry
-        trees, nodes, pending, shard, attempt, m, l, _ = pool_alloc_round(
+        (trees, nodes, pending, shard, attempt,
+         rounds, merged, logical, hits) = carry
+        trees, nodes, pending, shard, attempt, m, l, _, h = pool_alloc_round(
             pcfg, trees, levels, pending, shard, attempt, nodes
         )
         return (
             trees, nodes, pending, shard, attempt,
-            rounds + 1, merged + m, logical + l,
+            rounds + 1, merged + m, logical + l, hits + h,
         )
 
     def cond(carry):
-        _, _, pending, _, _, rounds, _, _ = carry
+        _, _, pending, _, _, rounds, _, _, _ = carry
         return pending.any() & (rounds < max_rounds)
 
     init = (
@@ -226,16 +296,24 @@ def pool_wavefront_alloc(
         jnp.int32(0),
         jnp.int32(0),
         jnp.int32(0),
+        jnp.int32(0),
     )
-    trees, nodes, _, shard, _, rounds, merged, logical = lax.while_loop(
+    trees, nodes, _, shard, _, rounds, merged, logical, hits = lax.while_loop(
         cond, round_body, init
     )
     ok = nodes > 0
+    if pcfg.fastpath is None:
+        fast_total = jnp.int32(0)
+    else:
+        fast = levels == fpmod.fp_level(pcfg.tree, pcfg.fastpath)
+        fast_total = (active & fast).sum(dtype=jnp.int32)
     stats = {
         "rounds": rounds,
         "merged_writes": merged,
         "logical_rmws": logical,
         "overflows": (ok & (shard != home)).sum(dtype=jnp.int32),
+        "fastpath_hits": hits,
+        "fastpath_spills": fast_total - hits,
     }
     return trees, nodes, shard, ok, stats
 
@@ -252,19 +330,51 @@ def pool_free_round(
     is released on the shard recorded in its handle; double frees and
     junk handles are dropped per shard exactly like the single tree.
 
+    With a fastpath configured, handles route purely by node range:
+    slab slots release through the bitmap (`slab_release`, single
+    merged RMW per shard), any other node inside or on the path to the
+    carved subtree is junk (neither allocator can have issued it —
+    freeing it tree-side could merge the carve away) and is dropped,
+    and everything else takes the ordinary merged buddy release.
+
     Returns (trees, merged_writes, logical_rmws, freed)."""
     S = pcfg.n_shards
+    fp = pcfg.fastpath
     sh_ids = jnp.arange(S, dtype=jnp.int32)
-    sh_active = active[None, :] & (shard[None, :] == sh_ids[:, None])
+    lane_mask = shard[None, :] == sh_ids[:, None]
+    if fp is None:
+        tree_part, slab_part = trees, None
+        tree_active = active
+    else:
+        TW = pcfg.tree.n_state_words
+        tree_part, slab_part = trees[:, :TW], trees[:, TW:]
+        slab_leaf = fpmod.in_slab_leaf(pcfg.tree, fp, nodes)
+        junk = fpmod.in_carved_junk(pcfg.tree, fp, nodes)
+        tree_active = active & ~slab_leaf & ~junk
+        rel = jax.vmap(
+            functools.partial(fpmod.slab_release, pcfg.tree, fp),
+            in_axes=(0, None, 0),
+        )
+        slab_part, sl_freed_s, sl_merged_s, sl_logical_s = rel(
+            slab_part, nodes, (active & slab_leaf)[None, :] & lane_mask
+        )
+    sh_active = tree_active[None, :] & lane_mask
     rnd = jax.vmap(
         functools.partial(free_round, pcfg.tree), in_axes=(0, None, 0)
     )
-    trees, merged_s, logical_s, freed_s = rnd(trees, nodes, sh_active)
+    tree_part, merged_s, logical_s, freed_s = rnd(
+        tree_part, nodes, sh_active
+    )
+    merged = merged_s.sum(dtype=jnp.int32)
+    logical = logical_s.sum(dtype=jnp.int32)
+    freed = freed_s.any(axis=0)
+    if fp is None:
+        return tree_part, merged, logical, freed
     return (
-        trees,
-        merged_s.sum(dtype=jnp.int32),
-        logical_s.sum(dtype=jnp.int32),
-        freed_s.any(axis=0),
+        jnp.concatenate([tree_part, slab_part], axis=1),
+        merged + sl_merged_s.sum(dtype=jnp.int32),
+        logical + sl_logical_s.sum(dtype=jnp.int32),
+        freed | sl_freed_s.any(axis=0),
     )
 
 
@@ -280,13 +390,19 @@ def pool_free_units(pcfg: PoolConfig, trees: Array) -> Array:
     bit-free and no reserved ancestor), so the per-shard sum over the
     leaf slice is exactly `NBBSRef.free_bytes() / min_size` of the host
     mirror.  O(n_words) vector work; cheap enough to ride along in the
-    jitted engine step's stats (docs/design.md §8)."""
+    jitted engine step's stats (docs/design.md §8).  With a fastpath,
+    free slab slots count at their octave's unit width, so totals match
+    an uncarved pool of the same capacity."""
     cfg = pcfg.tree
     lo = 1 << cfg.depth
+    TW = cfg.n_state_words
 
-    def one(tree):
-        alloc = cfg.layout.allocatable(cfg, tree)
-        return alloc[lo : 2 * lo].sum(dtype=jnp.int32)
+    def one(row):
+        alloc = cfg.layout.allocatable(cfg, row[:TW])
+        n = alloc[lo : 2 * lo].sum(dtype=jnp.int32)
+        if pcfg.fastpath is not None:
+            n = n + fpmod.slab_free_units(cfg, pcfg.fastpath, row[TW:])
+        return n
 
     return jax.vmap(one)(trees)
 
@@ -296,15 +412,25 @@ def pool_largest_run(pcfg: PoolConfig, trees: Array) -> Array:
     scalar — the in-graph mirror of `PagedKVManager.fragmentation()`'s
     `largest_run` (fragmentation observability without a host sync)."""
     cfg = pcfg.tree
+    TW = cfg.n_state_words
 
-    def one(tree):
-        alloc = cfg.layout.allocatable(cfg, tree)
+    def one(row):
+        alloc = cfg.layout.allocatable(cfg, row[:TW])
         best = jnp.int32(0)
         # static unrolled loop, deepest level first so larger runs win
         for lev in range(cfg.depth, cfg.max_level - 1, -1):
             lo, hi = 1 << lev, 1 << (lev + 1)
             has = alloc[lo:hi].any()
             best = jnp.where(has, jnp.int32(1 << (cfg.depth - lev)), best)
+        if pcfg.fastpath is not None:
+            # a free slab slot is a run of the fast octave's width
+            has = fpmod.slab_free_slots(cfg, pcfg.fastpath, row[TW:]) > 0
+            run = jnp.where(
+                has,
+                jnp.int32(fpmod.fp_units_per_slot(cfg, pcfg.fastpath)),
+                0,
+            )
+            best = jnp.maximum(best, run)
         return best
 
     return jax.vmap(one)(trees).max()

@@ -70,6 +70,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.core import fastpath
 from repro.core.concurrent import TreeConfig, alloc_round, free_round
 from repro.core.pool import PoolConfig
 
@@ -246,15 +247,38 @@ def _pool_step_kernel(
     """One shard's mixed step (grid axis 0 = shard).  The program sees
     only its own tree (VMEM row slice) plus the full lane vectors, and
     masks lanes by shard membership — the Pallas analogue of the
-    vmapped per-shard round in `core/pool.py`."""
+    vmapped per-shard round in `core/pool.py`.
+
+    With a fastpath configured the shard's slab bitmap words ride in
+    the same VMEM row (appended after the tree state): frees route by
+    node range before the merged tree release, and every alloc
+    iteration probes the slab (single-RMW claim) before the buddy
+    round, exactly like the reference pool."""
     s = pl.program_id(0)
     cfg = pcfg.tree
-    tree = trees_ref[0]
-    fmask = (free_active_ref[...] != 0) & (free_shard_ref[...] == s)
+    fp = pcfg.fastpath
+    TW = cfg.n_state_words
+    row = trees_ref[0]
+    tree, slab = row[:TW], row[TW:]
+    fmask_all = (free_active_ref[...] != 0) & (free_shard_ref[...] == s)
+    free_nodes = free_nodes_ref[...]
+    if fp is not None:
+        slab_leaf = fastpath.in_slab_leaf(cfg, fp, free_nodes)
+        junk = fastpath.in_carved_junk(cfg, fp, free_nodes)
+        slab, sl_freed, sl_merged, sl_logical = fastpath.slab_release(
+            cfg, fp, slab, free_nodes, fmask_all & slab_leaf
+        )
+        fmask = fmask_all & ~slab_leaf & ~junk
+    else:
+        sl_freed = jnp.zeros_like(fmask_all)
+        sl_merged = sl_logical = jnp.int32(0)
+        fmask = fmask_all
     tree, free_merged, free_logical, freed = free_round(
-        cfg, tree, free_nodes_ref[...], fmask
+        cfg, tree, free_nodes, fmask
     )
-    n_freed = freed.sum(dtype=jnp.int32)
+    n_freed = freed.sum(dtype=jnp.int32) + sl_freed.sum(dtype=jnp.int32)
+    free_merged = free_merged + sl_merged
+    free_logical = free_logical + sl_logical
 
     levels = levels_ref[...]
     pending = (active_ref[...] != 0) & (alloc_shard_ref[...] == s)
@@ -262,30 +286,48 @@ def _pool_step_kernel(
     nodes = jnp.zeros((K,), dtype=jnp.int32)
 
     def body(_, carry):
-        tree, nodes, pending, rounds, merged, logical = carry
+        tree, slab, nodes, pending, rounds, merged, logical, hits = carry
         live = pending.any()
 
         def run(args):
-            tree, nodes, pending, rounds, merged, logical = args
+            tree, slab, nodes, pending, rounds, merged, logical, hits = args
+            if fp is not None:
+                want = pending & (levels == fastpath.fp_level(cfg, fp))
+                slab, n_fp, got, m_fp, h = fastpath.slab_claim(
+                    cfg, fp, slab, want
+                )
+                nodes = jnp.where(got, n_fp, nodes)
+                pending = pending & ~got
+                merged, logical = merged + m_fp, logical + h
+                hits = hits + h
             tree, nodes, pending, m, l, _ = alloc_round(
                 cfg, tree, levels, pending, nodes
             )
-            return tree, nodes, pending, rounds + 1, merged + m, logical + l
+            return (
+                tree, slab, nodes, pending,
+                rounds + 1, merged + m, logical + l, hits,
+            )
 
         return lax.cond(
-            live, run, lambda a: a, (tree, nodes, pending, rounds, merged, logical)
+            live, run, lambda a: a,
+            (tree, slab, nodes, pending, rounds, merged, logical, hits),
         )
 
-    tree, nodes, pending, rounds, merged, logical = lax.fori_loop(
+    tree, slab, nodes, pending, rounds, merged, logical, hits = lax.fori_loop(
         0,
         max_rounds,
         body,
-        (tree, nodes, pending, jnp.int32(0), jnp.int32(0), jnp.int32(0)),
+        (
+            tree, slab, nodes, pending,
+            jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+        ),
     )
-    trees_out_ref[0] = tree
+    trees_out_ref[0] = (
+        jnp.concatenate([tree, slab]) if fp is not None else tree
+    )
     nodes_ref[0] = nodes
     stats_ref[0] = jnp.stack(
-        [rounds, merged, logical, free_merged, free_logical, n_freed]
+        [rounds, merged, logical, free_merged, free_logical, n_freed, hits]
     )
 
 
@@ -310,8 +352,9 @@ def pool_wavefront_step_pallas(
     Each lane allocates on `alloc_shard[k]` and each free lands on
     `free_shard[f]`; overflow re-routing across launches is the caller's
     job (`ops.nbbs_pool_wavefront_step`).  Returns (trees, nodes, ok,
-    stats[S, 6]) with per-shard stats rows = [alloc_rounds,
-    alloc_merged, alloc_logical, free_merged, free_logical, freed].
+    stats[S, 7]) with per-shard stats rows = [alloc_rounds,
+    alloc_merged, alloc_logical, free_merged, free_logical, freed,
+    fastpath_hits] (the last always 0 without a configured fastpath).
     """
     if active is None:
         active = jnp.ones(levels.shape, dtype=jnp.int32)
@@ -326,7 +369,7 @@ def pool_wavefront_step_pallas(
         out_shape=[
             jax.ShapeDtypeStruct((S, pcfg.n_state_words), pcfg.tree.state_dtype),
             jax.ShapeDtypeStruct((S, K), jnp.int32),
-            jax.ShapeDtypeStruct((S, 6), jnp.int32),
+            jax.ShapeDtypeStruct((S, 7), jnp.int32),
         ],
         in_specs=[
             pl.BlockSpec((1, pcfg.n_state_words), lambda s: (s, 0)),  # own shard tree
@@ -340,7 +383,7 @@ def pool_wavefront_step_pallas(
         out_specs=[
             pl.BlockSpec((1, pcfg.n_state_words), lambda s: (s, 0)),
             pl.BlockSpec((1, K), lambda s: (s, 0)),
-            pl.BlockSpec((1, 6), lambda s: (s, 0)),
+            pl.BlockSpec((1, 7), lambda s: (s, 0)),
         ],
         grid=(S,),
         interpret=interpret,

@@ -27,6 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import fastpath
 from repro.core.concurrent import TreeConfig, wavefront_step
 from repro.core.pool import PoolConfig, home_shard, pool_wavefront_step
 from repro.kernels import ref as kref
@@ -278,6 +279,7 @@ def nbbs_pool_wavefront_step(
         "free_writes": jnp.int32(0),
         "free_logical_rmws": jnp.int32(0),
         "freed": jnp.int32(0),
+        "fastpath_hits": jnp.int32(0),
     }
     for _ in range(S):
         trees, n_a, ok_a, st = pool_wavefront_step_pallas(
@@ -304,6 +306,7 @@ def nbbs_pool_wavefront_step(
         agg["free_writes"] = agg["free_writes"] + st[:, 3].sum()
         agg["free_logical_rmws"] = agg["free_logical_rmws"] + st[:, 4].sum()
         agg["freed"] = agg["freed"] + st[:, 5].sum()
+        agg["fastpath_hits"] = agg["fastpath_hits"] + st[:, 6].sum()
         fa = jnp.zeros_like(free_active)  # frees apply on the first launch
         # early exit is an eager-mode optimization only: under jit
         # `pending` is a tracer and the loop simply runs all S launches
@@ -314,4 +317,10 @@ def nbbs_pool_wavefront_step(
     ok = nodes > 0
     agg["free_merged_writes"] = agg["free_writes"]
     agg["overflows"] = (ok & (out_shard != home)).sum(dtype=jnp.int32)
+    if pcfg.fastpath is None:
+        fast_total = jnp.int32(0)
+    else:
+        fast = levels == fastpath.fp_level(pcfg.tree, pcfg.fastpath)
+        fast_total = (active & fast).sum(dtype=jnp.int32)
+    agg["fastpath_spills"] = fast_total - agg["fastpath_hits"]
     return trees, nodes, out_shard, ok, agg

@@ -89,6 +89,8 @@ class PagedKVManager:
         scattered: bool = True,
         n_shards: int = 1,
         layout: Optional[str] = None,
+        fastpath: bool = False,
+        fastpath_slab_level: int = 2,
     ) -> None:
         if num_pages & (num_pages - 1):
             raise ValueError("num_pages must be a power of two")
@@ -123,6 +125,37 @@ class PagedKVManager:
             )
             for s in range(n_shards)
         ]
+        # Fixed-size fast path (host mirror of core/fastpath.py): the
+        # leftmost 1/2^slab_level of each shard is carved out of its
+        # buddy tree at init and served as single pages from a bitmap.
+        # Single-page runs claim a slab slot first and spill into the
+        # buddy only when the slab is full; frees route by page-id
+        # range.  Handles stay ordinary global page ids throughout.
+        self.fastpath = fastpath
+        self.fastpath_slab_level = fastpath_slab_level
+        self.fastpath_hits = 0
+        self.fastpath_spills = 0
+        self._slab_free: List[np.ndarray] = []
+        if fastpath:
+            slab_pages = self.pages_per_shard >> fastpath_slab_level
+            if slab_pages < 1:
+                raise ValueError(
+                    "fastpath slab_level too deep for "
+                    f"{self.pages_per_shard} pages per shard"
+                )
+            self.slab_pages = slab_pages
+            for s, buddy in enumerate(self.buddies):
+                base = s * self.pages_per_shard
+                got = 0
+                while got < slab_pages:  # carve leftmost, contiguous
+                    run = min(self.max_run_pages, slab_pages - got)
+                    addr = buddy.nb_alloc(run, scattered=False)
+                    assert addr == base + got, "carve must be leftmost"
+                    got += run
+                self._slab_free.append(np.ones(slab_pages, bool))
+            self.device_pool_config()  # fail fast on bad slab geometry
+        else:
+            self.slab_pages = 0
         self.seqs: Dict[int, SeqAlloc] = {}
 
     @property
@@ -143,6 +176,8 @@ class PagedKVManager:
         from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
         from repro.core.pool import PoolConfig
 
+        from repro.core.fastpath import FastPathConfig
+
         tree = TreeConfig(
             depth=_ilog2(self.pages_per_shard),
             max_level=_ilog2(self.pages_per_shard // self.max_run_pages),
@@ -150,7 +185,12 @@ class PagedKVManager:
                 BUNCH_PACKED if self.layout == "bunch-packed" else UNPACKED
             ),
         )
-        return PoolConfig(tree, self.n_shards)
+        fp = (
+            FastPathConfig(level=None, slab_level=self.fastpath_slab_level)
+            if self.fastpath
+            else None
+        )
+        return PoolConfig(tree, self.n_shards, fastpath=fp)
 
     # ------------------------------------------------------------------
     def home_shard(self, seq_id: int) -> int:
@@ -164,20 +204,47 @@ class PagedKVManager:
     def _next_pow2(self, n: int) -> int:
         return 1 << (n - 1).bit_length()
 
+    def _alloc_run(self, shard: int, run: int) -> Optional[range]:
+        """One run on one shard: single-page runs probe the fastpath
+        slab first (O(1) find-first-zero claim), everything else — and
+        slab-exhausted spills — takes the buddy climb."""
+        if self.fastpath and run == 1:
+            free = np.flatnonzero(self._slab_free[shard])
+            if len(free):
+                slot = int(free[0])
+                self._slab_free[shard][slot] = False
+                self.fastpath_hits += 1
+                page = shard * self.pages_per_shard + slot
+                return range(page, page + 1)
+            self.fastpath_spills += 1
+        addr = self.buddies[shard].nb_alloc(run, scattered=self.scattered)
+        if addr is None:
+            return None
+        return range(addr, addr + run)
+
+    def _free_run(self, shard: int, r: range) -> None:
+        """Release one run, routing by page-id range: pages under the
+        shard's slab clear their bitmap bit, the rest free through the
+        buddy (the host mirror of `pool_free_round`'s routing)."""
+        local = r.start - shard * self.pages_per_shard
+        if self.fastpath and len(r) == 1 and 0 <= local < self.slab_pages:
+            self._slab_free[shard][local] = True
+            return
+        self.buddies[shard].nb_free(r.start)
+
     def _try_admit_on(self, shard: int, need: int) -> Optional[List[range]]:
         """Allocate `need` pages worth of runs on one shard, or roll back
         and return None (an admission is all-on-one-shard or nothing)."""
-        buddy = self.buddies[shard]
         runs: List[range] = []
         remaining = need
         while remaining:
             run = min(remaining, self.max_run_pages)
-            addr = buddy.nb_alloc(run, scattered=self.scattered)
-            if addr is None:
-                for r in runs:  # roll back partial admission
-                    buddy.nb_free(r.start)
+            r = self._alloc_run(shard, run)
+            if r is None:
+                for old in runs:  # roll back partial admission
+                    self._free_run(shard, old)
                 return None
-            runs.append(range(addr, addr + run))
+            runs.append(r)
             remaining -= run
         return runs
 
@@ -219,26 +286,42 @@ class PagedKVManager:
         back (a partially grown sequence would silently leak pages the
         token count never accounts for)."""
         s = self.seqs[seq_id]
-        buddy = self.buddies[s.shard]
         n_runs_before = len(s.runs)
         s.n_tokens += n_new
         while self.pages_for_tokens(s.n_tokens) > s.n_pages:
             grow = min(self._next_pow2(max(s.n_pages, 1)), self.max_run_pages)
-            addr = buddy.nb_alloc(grow, scattered=self.scattered)
-            if addr is None:
+            r = self._alloc_run(s.shard, grow)
+            if r is None:
                 s.n_tokens -= n_new
                 grown = s.runs[n_runs_before:]
                 del s.runs[n_runs_before:]
-                buddy.nb_free_many(r.start for r in grown)
+                self._free_runs(s.shard, grown)
                 return False
-            s.runs.append(range(addr, addr + grow))
+            s.runs.append(r)
         return True
+
+    def _free_runs(self, shard: int, runs: List[range]) -> None:
+        """Release a burst of runs on one shard: slab pages clear their
+        bitmap bits, the rest go back in one merged buddy burst."""
+        buddy_addrs: List[int] = []
+        for r in runs:
+            local = r.start - shard * self.pages_per_shard
+            if (
+                self.fastpath
+                and len(r) == 1
+                and 0 <= local < self.slab_pages
+            ):
+                self._slab_free[shard][local] = True
+            else:
+                buddy_addrs.append(r.start)
+        if buddy_addrs:
+            self.buddies[shard].nb_free_many(buddy_addrs)
 
     def free_sequence(self, seq_id: int) -> None:
         """Release a sequence: all of its runs go back in one burst call
         on its shard (one merged release pass on wavefront-backed pools)."""
         s = self.seqs.pop(seq_id)
-        self.buddies[s.shard].nb_free_many(r.start for r in s.runs)
+        self._free_runs(s.shard, s.runs)
 
     def free_sequences(self, seq_ids: List[int]) -> None:
         """Batch eviction: release every run of every sequence, grouped
@@ -250,14 +333,12 @@ class PagedKVManager:
         missing = [i for i in unique if i not in self.seqs]
         if missing:
             raise KeyError(missing[0])
-        per_shard: Dict[int, List[int]] = {}
+        per_shard: Dict[int, List[range]] = {}
         for seq_id in unique:
             s = self.seqs.pop(seq_id)
-            per_shard.setdefault(s.shard, []).extend(
-                r.start for r in s.runs
-            )
-        for shard, addrs in per_shard.items():
-            self.buddies[shard].nb_free_many(addrs)
+            per_shard.setdefault(s.shard, []).extend(s.runs)
+        for shard, runs in per_shard.items():
+            self._free_runs(shard, runs)
 
     # ------------------------------------------------------------------
     def block_table(self, seq_id: int, max_pages: int) -> np.ndarray:
@@ -276,17 +357,28 @@ class PagedKVManager:
 
     # ------------------------------------------------------------------
     def free_pages(self) -> int:
-        return sum(b.free_bytes() for b in self.buddies)  # unit == page
+        slab = sum(int(f.sum()) for f in self._slab_free)
+        return slab + sum(b.free_bytes() for b in self.buddies)
 
-    def _largest_run_on(self, buddy: NBBSRef) -> int:
-        return _largest_free_run(buddy, self.max_run_pages)
+    def _largest_run_on(self, shard: int) -> int:
+        best = _largest_free_run(self.buddies[shard], self.max_run_pages)
+        if self.fastpath and self._slab_free[shard].any():
+            best = max(best, 1)  # slab serves single pages only
+        return best
 
     def fragmentation(self) -> dict:
         """Occupancy + largest allocatable run (O(tree) introspection),
         pool-wide plus the per-shard breakdown."""
         free = self.free_pages()
-        per_shard_largest = [self._largest_run_on(b) for b in self.buddies]
+        per_shard_largest = [
+            self._largest_run_on(s) for s in range(self.n_shards)
+        ]
         per_shard_free = [b.free_bytes() for b in self.buddies]
+        if self.fastpath:
+            per_shard_free = [
+                n + int(f.sum())
+                for n, f in zip(per_shard_free, self._slab_free)
+            ]
         return {
             "free_pages": free,
             "used_pages": self.num_pages - free,
@@ -299,6 +391,8 @@ class PagedKVManager:
             ),
             "per_shard_free": per_shard_free,
             "per_shard_largest_run": per_shard_largest,
+            "fastpath_hits": self.fastpath_hits,
+            "fastpath_spills": self.fastpath_spills,
         }
 
     def _occupied_ancestor(self, buddy: NBBSRef, n: int) -> bool:
@@ -374,6 +468,8 @@ class PageOracle:
         page_tokens: int,
         n_shards: int = 1,
         max_rounds: int = 64,
+        fastpath: bool = False,
+        fastpath_slab_level: int = 2,
     ) -> None:
         if num_pages & (num_pages - 1):
             raise ValueError("num_pages must be a power of two")
@@ -395,6 +491,32 @@ class PageOracle:
             )
             for s in range(n_shards)
         ]
+        # Fastpath mirror (core/fastpath.py): the leftmost
+        # 1/2^slab_level of each shard is carved out of its tree at init
+        # and served from a find-first-zero bitmap.  Every page request
+        # probes the slab of its *current* shard before the tree scan —
+        # the host linearization of the device round's slab claim, exact
+        # because the claim's rank order over free slots equals lane
+        # order and a slab page's id equals the leaf it replaced.
+        self.fastpath = fastpath
+        self.fastpath_slab_level = fastpath_slab_level
+        self.fastpath_hits = 0
+        self.fastpath_spills = 0
+        self._slab_free: List[np.ndarray] = []
+        if fastpath:
+            slab_pages = self.pages_per_shard >> fastpath_slab_level
+            if slab_pages < 1 or fastpath_slab_level < 1:
+                raise ValueError(
+                    "fastpath slab_level must carve a proper subtree of "
+                    f"{self.pages_per_shard} pages per shard"
+                )
+            self.slab_pages = slab_pages
+            for s, buddy in enumerate(self.buddies):
+                addr = buddy.nb_alloc(slab_pages, scattered=False)
+                assert addr == s * self.pages_per_shard, "carve is leftmost"
+                self._slab_free.append(np.ones(slab_pages, bool))
+        else:
+            self.slab_pages = 0
 
     def home_shard(self, lane_id: int) -> int:
         return ((lane_id * FIB_HASH) & 0xFFFFFFFF) % self.n_shards
@@ -407,6 +529,7 @@ class PageOracle:
         pend = [
             (k, lid, self.home_shard(lid), 0) for k, lid in requests
         ]
+        call_hits = 0
         for _ in range(self.max_rounds):
             if not pend:
                 break
@@ -419,11 +542,23 @@ class PageOracle:
                 won = 0
                 for idx, (k, lid, sh, att) in enumerate(entries):
                     if exhausted:
+                        # the slab was already empty when the tree ran
+                        # dry (it serves the lane-order prefix first),
+                        # so post-exhaustion entries skip both paths
                         if att + 1 < self.n_shards:
                             nxt.append(
                                 (k, lid, (sh + 1) % self.n_shards, att + 1)
                             )
                         continue  # att+1 >= S: probed every shard, fail
+                    if self.fastpath:
+                        free = np.flatnonzero(self._slab_free[s])
+                        if len(free):
+                            slot = int(free[0])
+                            self._slab_free[s][slot] = False
+                            self.fastpath_hits += 1
+                            call_hits += 1
+                            out[k] = s * self.pages_per_shard + slot
+                            continue
                     addr = self.buddies[s].nb_alloc(1, scattered=False)
                     if addr is not None:
                         out[k] = addr
@@ -440,28 +575,49 @@ class PageOracle:
                                 (k, lid, (sh + 1) % self.n_shards, att + 1)
                             )
             pend = nxt
+        if self.fastpath:
+            # device spill accounting: every fast-octave request that was
+            # not served by a slab claim — including outright failures
+            self.fastpath_spills += len(requests) - call_hits
         return out
 
     def free_burst(self, pages) -> None:
         """Release global page ids, one merged burst per shard (the
-        host mirror of the engine's in-graph `pool_free_round`)."""
+        host mirror of the engine's in-graph `pool_free_round`).  With
+        the fastpath on, ids under a shard's slab set their bitmap bit
+        instead — a double free of a slab page is a silent no-op, the
+        mirror of `slab_release`'s validity mask."""
         per_shard: Dict[int, List[int]] = {}
         for p in pages:
-            per_shard.setdefault(p // self.pages_per_shard, []).append(p)
+            s = p // self.pages_per_shard
+            local = p - s * self.pages_per_shard
+            if self.fastpath and local < self.slab_pages:
+                self._slab_free[s][local] = True
+            else:
+                per_shard.setdefault(s, []).append(p)
         for s, addrs in per_shard.items():
             self.buddies[s].nb_free_many(addrs)
 
     # -- occupancy ----------------------------------------------------
     def free_pages(self) -> int:
-        return sum(b.free_bytes() for b in self.buddies)
+        slab = sum(int(f.sum()) for f in self._slab_free)
+        return slab + sum(b.free_bytes() for b in self.buddies)
 
     def per_shard_free(self) -> List[int]:
-        return [b.free_bytes() for b in self.buddies]
+        out = [b.free_bytes() for b in self.buddies]
+        if self.fastpath:
+            out = [n + int(f.sum()) for n, f in zip(out, self._slab_free)]
+        return out
 
     def fragmentation(self) -> dict:
         per_shard_largest = [
             _largest_free_run(b, self.pages_per_shard) for b in self.buddies
         ]
+        if self.fastpath:
+            per_shard_largest = [
+                max(n, 1) if f.any() else n
+                for n, f in zip(per_shard_largest, self._slab_free)
+            ]
         free = self.free_pages()
         return {
             "free_pages": free,

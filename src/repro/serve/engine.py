@@ -53,6 +53,8 @@ class ServeEngine:
         layout: Optional[str] = None,
         max_table_pages: Optional[int] = None,
         log_stats: bool = False,
+        fastpath: bool = False,
+        fastpath_slab_level: int = 2,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
             "paged engine covers attention families; SSM/hybrid use "
@@ -71,8 +73,16 @@ class ServeEngine:
         # `layout` picks the device tree-state format for wavefront-
         # backed admission ("bunch-packed" = the §III-D packed words,
         # docs/design.md §3); handles and the engine API are unchanged.
+        # `fastpath` carves the O(1) bitmap-slab front end out of each
+        # shard (core/fastpath.py): single-page runs — decode growth —
+        # claim slab slots and spill into the buddy climb when full.
         self.kv = PagedKVManager(
-            num_pages, page_tokens, n_shards=n_shards, layout=layout
+            num_pages,
+            page_tokens,
+            n_shards=n_shards,
+            layout=layout,
+            fastpath=fastpath,
+            fastpath_slab_level=fastpath_slab_level,
         )
         self.pool = init_pool(cfg, num_pages, page_tokens, dtype)
         # width of the per-sequence block tables handed to the kernel;

@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
+from repro.core.fastpath import FastPathConfig
 from repro.core.nbbs_jax import nb_pool_alloc_pages, nb_pool_free_pages
 from repro.core.pool import PoolConfig, pool_free_units, pool_largest_run
 from repro.serve.engine import Request
@@ -97,6 +98,11 @@ class EngineConfig:
     impl: str = "auto"
     dtype: str = "float32"
     max_rounds: int = 64
+    # fixed-size fast path (core/fastpath.py): a per-shard bitmap slab
+    # of single pages carved out of the buddy tree, probed in-graph
+    # before the buddy climb on every decode-boundary alloc
+    fastpath: bool = False
+    fastpath_slab_level: int = 2
 
     def __post_init__(self):
         if self.num_pages & (self.num_pages - 1):
@@ -107,6 +113,8 @@ class EngineConfig:
             raise ValueError("num_pages must divide evenly across shards")
         if self.layout not in ("unpacked", "bunch-packed"):
             raise ValueError(f"unknown tree layout {self.layout!r}")
+        if self.fastpath:
+            self.pool_config()  # fail fast on bad slab geometry
 
     @property
     def pages_per_shard(self) -> int:
@@ -119,7 +127,16 @@ class EngineConfig:
     def pool_config(self) -> PoolConfig:
         depth = (self.pages_per_shard - 1).bit_length()
         layout = BUNCH_PACKED if self.layout == "bunch-packed" else UNPACKED
-        return PoolConfig(TreeConfig(depth=depth, max_level=0, layout=layout), self.n_shards)
+        fp = (
+            FastPathConfig(level=None, slab_level=self.fastpath_slab_level)
+            if self.fastpath
+            else None
+        )
+        return PoolConfig(
+            TreeConfig(depth=depth, max_level=0, layout=layout),
+            self.n_shards,
+            fastpath=fp,
+        )
 
     def lane_capacity_tokens(self) -> int:
         return self.max_lane_pages * self.page_tokens
@@ -162,6 +179,8 @@ class EngineStepStats(NamedTuple):
     free_logical_rmws: Array
     free_pages: Array         # pool-wide free pages after the step
     largest_run: Array        # largest allocatable run (fragmentation)
+    fastpath_hits: Array      # allocs served by the O(1) slab claim
+    fastpath_spills: Array    # fast-octave allocs that took the climb
 
 
 def _zero_stats() -> EngineStepStats:
@@ -301,6 +320,8 @@ def _engine_step_impl(
         free_logical_rmws=fstats["free_logical_rmws"],
         free_pages=pool_free_units(pcfg, trees).sum(dtype=jnp.int32),
         largest_run=pool_largest_run(pcfg, trees),
+        fastpath_hits=astats["fastpath_hits"],
+        fastpath_spills=astats["fastpath_spills"],
     )
     return new_state, stats
 
@@ -343,7 +364,9 @@ def admit_pages(
     sequence id; on partial failure the successes are rolled back by
     the same merged free pass, so a failed admission leaves the pool
     bit-identical.  Returns (trees, shards[MP], offs[MP], admitted,
-    probe_overflows)."""
+    probe_overflows, fastpath_hits, fastpath_spills) — the fastpath
+    counters include rolled-back claims, matching the oracle's
+    accounting."""
     pcfg = ecfg.pool_config()
     MP = ecfg.max_lane_pages
     lanes = jnp.arange(MP)
@@ -364,6 +387,8 @@ def admit_pages(
         jnp.where(keep, off, -1),
         admitted,
         stats["overflows"],
+        stats["fastpath_hits"],
+        stats["fastpath_spills"],
     )
 
 
@@ -486,6 +511,8 @@ class JitServeEngine:
         n_shards: int = 1,
         layout: Optional[str] = None,
         max_rounds: int = 64,
+        fastpath: bool = False,
+        fastpath_slab_level: int = 2,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
             "paged engine covers attention families (docs/design.md §5)"
@@ -505,6 +532,8 @@ class JitServeEngine:
             impl=impl,
             dtype=jnp.dtype(dtype).name,
             max_rounds=max_rounds,
+            fastpath=fastpath,
+            fastpath_slab_level=fastpath_slab_level,
         )
         self.cfg = cfg
         self.params = params
@@ -520,6 +549,9 @@ class JitServeEngine:
         self.stats = {
             "admitted": 0, "queued_full": 0, "rejected": 0,
             "steps": 0, "overflow_retired": 0,
+            # admission-path slab counters (decode-path ones live in
+            # the device-side EngineStepStats; stat_totals sums both)
+            "admit_fastpath_hits": 0, "admit_fastpath_spills": 0,
         }
         self.acc = _zero_stats()  # running device-side stat totals
 
@@ -555,10 +587,13 @@ class JitServeEngine:
                 self.stats["rejected"] += 1
                 continue
             need = self._pages_for(len(req.prompt) - 1)
-            trees, shards, offs, admitted, _ = admit_pages(
+            trees, shards, offs, admitted, _, fp_h, fp_s = admit_pages(
                 self.ecfg, self.state.trees,
                 jnp.int32(req.req_id), jnp.int32(need),
             )
+            if self.ecfg.fastpath:  # admission already syncs on `admitted`
+                self.stats["admit_fastpath_hits"] += int(fp_h)
+                self.stats["admit_fastpath_spills"] += int(fp_s)
             if not bool(admitted):
                 self.stats["queued_full"] += 1
                 break  # pool full: natural admission control
@@ -672,9 +707,15 @@ class JitServeEngine:
 
     # -- observability -------------------------------------------------
     def stat_totals(self) -> Dict[str, int]:
-        """Sync and return the accumulated EngineStepStats counters."""
+        """Sync and return the accumulated EngineStepStats counters.
+        The fastpath counters cover both allocation paths: decode-step
+        growth (device accumulator) plus admission claims (host
+        counters), so they compare directly against `PageOracle`'s."""
         vals = jax.device_get(self.acc)
-        return {f: int(v) for f, v in zip(EngineStepStats._fields, vals)}
+        out = {f: int(v) for f, v in zip(EngineStepStats._fields, vals)}
+        out["fastpath_hits"] += self.stats["admit_fastpath_hits"]
+        out["fastpath_spills"] += self.stats["admit_fastpath_spills"]
+        return out
 
     def device_free_pages(self) -> int:
         return int(

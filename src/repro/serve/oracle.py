@@ -64,6 +64,8 @@ class HostOracleEngine:
         max_out: int = 64,
         n_shards: int = 1,
         max_rounds: int = 64,
+        fastpath: bool = False,
+        fastpath_slab_level: int = 2,
     ) -> None:
         if max_lane_pages is None:
             max_lane_pages = min(num_pages, 128)
@@ -73,7 +75,12 @@ class HostOracleEngine:
         self.max_out = max_out
         self.num_pages = num_pages
         self.pool = PageOracle(
-            num_pages, page_tokens, n_shards=n_shards, max_rounds=max_rounds
+            num_pages,
+            page_tokens,
+            n_shards=n_shards,
+            max_rounds=max_rounds,
+            fastpath=fastpath,
+            fastpath_slab_level=fastpath_slab_level,
         )
         self.lanes = [_Lane() for _ in range(max_batch)]
         self.waiting: List[Request] = []
@@ -86,6 +93,7 @@ class HostOracleEngine:
         self.stats = {
             "admitted": 0, "queued_full": 0, "rejected": 0,
             "steps": 0, "overflow_retired": 0,
+            "admit_fastpath_hits": 0, "admit_fastpath_spills": 0,
         }
 
     # -- admission (mirrors JitServeEngine line for line) -------------
@@ -119,8 +127,13 @@ class HostOracleEngine:
             need = self._pages_for(len(req.prompt) - 1)
             # all-or-nothing wavefront claim, homed by the sequence id
             # (`admit_pages`: one wavefront lane per prompt page)
+            h0, s0 = self.pool.fastpath_hits, self.pool.fastpath_spills
             got = self.pool.alloc_wavefront(
                 [(k, req.req_id) for k in range(need)]
+            )
+            self.stats["admit_fastpath_hits"] += self.pool.fastpath_hits - h0
+            self.stats["admit_fastpath_spills"] += (
+                self.pool.fastpath_spills - s0
             )
             pages = [got[k] for k in range(need)]
             if any(p is None for p in pages):

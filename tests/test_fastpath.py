@@ -1,0 +1,426 @@
+"""Fast-path battery: the bitmap-slab front end (core/fastpath.py).
+
+Differential contract: a fastpath pool must behave exactly like the
+fallback-only pool on everything a caller can observe — per-lane
+success/failure, total pages outstanding, drain-to-empty — while
+serving fast-octave hits through the O(1) slab claim.  On *pure
+leaf-octave* traffic the equivalence is bit-for-bit on addresses too:
+the slab's find-first-zero order equals the plain pool's rank order
+over the same leftmost leaves.
+
+Runs as its own CI matrix cell (`-m fastpath`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastpath as fpmod
+from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
+from repro.core.fastpath import FastPathConfig
+from repro.core.pool import (
+    PoolConfig,
+    pool_free_units,
+    pool_largest_run,
+    pool_wavefront_alloc,
+    pool_wavefront_free,
+)
+
+pytestmark = pytest.mark.fastpath
+
+LAYOUTS = [("unpacked", UNPACKED), ("bunch-packed", BUNCH_PACKED)]
+SHARDS = [1, 4]
+
+
+def _pair(depth, S, layout, slab_level=2):
+    """(fastpath pool, plain pool) over identical tree geometry."""
+    tree = TreeConfig(depth=depth, layout=layout)
+    fp = FastPathConfig(level=None, slab_level=slab_level)
+    return PoolConfig(tree, S, fastpath=fp), PoolConfig(tree, S)
+
+
+def _alloc(pcfg, trees, levels, lane_ids):
+    K = len(levels)
+    return pool_wavefront_alloc(
+        pcfg,
+        trees,
+        jnp.asarray(levels, jnp.int32),
+        jnp.ones(K, bool),
+        64,
+        jnp.asarray(lane_ids, jnp.int32),
+    )
+
+
+class TestFastPathConfig:
+    def test_validation(self):
+        tree = TreeConfig(depth=3)
+        with pytest.raises(ValueError):
+            PoolConfig(tree, 1, fastpath=FastPathConfig(slab_level=0))
+        with pytest.raises(ValueError):
+            PoolConfig(tree, 1, fastpath=FastPathConfig(slab_level=4))
+        with pytest.raises(ValueError):
+            PoolConfig(tree, 1, fastpath=FastPathConfig(level=1, slab_level=2))
+        with pytest.raises(ValueError):
+            # slab shallower than max_level: its slots are unservable
+            PoolConfig(
+                TreeConfig(depth=4, max_level=3),
+                1,
+                fastpath=FastPathConfig(slab_level=2),
+            )
+
+    def test_geometry(self):
+        tree = TreeConfig(depth=5)
+        fp = FastPathConfig(level=None, slab_level=2)
+        assert fpmod.fp_level(tree, fp) == 5  # None -> leaf octave
+        assert fpmod.fp_carve_node(fp) == 4
+        assert fpmod.fp_n_slots(tree, fp) == 8
+        assert fpmod.fp_units_per_slot(tree, fp) == 1
+        pcfg = PoolConfig(tree, 2, fastpath=fp)
+        trees = pcfg.empty_trees()
+        # carved baseline: every slab slot free, tree minus the subtree
+        assert int(pool_free_units(pcfg, trees).sum()) == 64
+        for row in np.asarray(trees):
+            slab = jnp.asarray(row[tree.n_state_words:])
+            assert int(fpmod.slab_free_slots(tree, fp, slab)) == 8
+
+
+class TestFastPathDifferential:
+    """The fastpath pool vs the fallback-only pool on shared traces."""
+
+    @pytest.mark.parametrize("S", SHARDS)
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_pure_leaf_traffic_is_address_identical(self, name, layout, S):
+        depth = 5
+        fpc, plain = _pair(depth, S, layout)
+        ta, tb = fpc.empty_trees(), plain.empty_trees()
+        rng = np.random.default_rng(S)
+        live = []  # (node, shard), identical in both pools
+        hits = 0
+        for step in range(8):
+            K = int(rng.integers(4, 12))
+            lv = [depth] * K
+            ids = rng.integers(0, 100, K)
+            ta, na, sa, oka, st_a = _alloc(fpc, ta, lv, ids)
+            tb, nb, sb, okb, st_b = _alloc(plain, tb, lv, ids)
+            assert (np.asarray(oka) == np.asarray(okb)).all()
+            assert (np.asarray(na) == np.asarray(nb)).all()  # addresses
+            assert (np.asarray(sa) == np.asarray(sb)).all()
+            hits += int(st_a["fastpath_hits"])
+            assert int(st_b["fastpath_hits"]) == 0
+            live += [
+                (int(n), int(s))
+                for n, s, o in zip(np.asarray(na), np.asarray(sa),
+                                   np.asarray(oka))
+                if o
+            ]
+            if step % 3 == 2 and live:
+                k = len(live) // 2
+                rng.shuffle(live)
+                drop, live = live[:k], live[k:]
+                fn = jnp.asarray([n for n, _ in drop], jnp.int32)
+                fs = jnp.asarray([s for _, s in drop], jnp.int32)
+                act = jnp.ones(len(drop), bool)
+                ta, fa, _ = pool_wavefront_free(fpc, ta, fn, fs, act)
+                tb, fb, _ = pool_wavefront_free(plain, tb, fn, fs, act)
+                assert bool(fa.all()) and bool(fb.all())
+            assert int(pool_free_units(fpc, ta).sum()) == int(
+                pool_free_units(plain, tb).sum()
+            )
+        assert hits > 0  # the slab actually served traffic
+        # drain: both pools return to their empty baseline
+        if live:
+            fn = jnp.asarray([n for n, _ in live], jnp.int32)
+            fs = jnp.asarray([s for _, s in live], jnp.int32)
+            act = jnp.ones(len(live), bool)
+            ta, fa, _ = pool_wavefront_free(fpc, ta, fn, fs, act)
+            tb, fb, _ = pool_wavefront_free(plain, tb, fn, fs, act)
+            assert bool(fa.all()) and bool(fb.all())
+        assert (np.asarray(ta) == np.asarray(fpc.empty_trees())).all()
+        assert (np.asarray(tb) == np.asarray(plain.empty_trees())).all()
+
+    @pytest.mark.parametrize("S", SHARDS)
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_mixed_octave_capacity_equality(self, name, layout, S):
+        """Mixed-octave traces: coarse requests spill around the carve,
+        so addresses may differ, but per-lane success/failure and total
+        pages outstanding must match the fallback-only pool whenever
+        coarse demand fits outside the slab (the carve-out trades
+        leftmost coarse chunks for slab pages one-for-one in units)."""
+        depth = 5
+        fpc, plain = _pair(depth, S, layout)
+        ta, tb = fpc.empty_trees(), plain.empty_trees()
+        rng = np.random.default_rng(7 * S)
+        live_a, live_b = [], []  # position-aligned (ok masks are equal)
+        for step in range(10):
+            K = int(rng.integers(3, 9))
+            # mostly leaf traffic with some level-3/4 chunks: per shard
+            # the non-leaf demand stays below the uncarved 3/4 subtree
+            lv = [
+                depth if rng.random() < 0.7 else int(rng.integers(3, depth))
+                for _ in range(K)
+            ]
+            ids = rng.integers(0, 100, K)
+            ta, na, sa, oka, st_a = _alloc(fpc, ta, lv, ids)
+            tb, nb, sb, okb, st_b = _alloc(plain, tb, lv, ids)
+            assert (np.asarray(oka) == np.asarray(okb)).all(), (name, S, step)
+            for n, s, o in zip(np.asarray(na), np.asarray(sa),
+                               np.asarray(oka)):
+                if o:
+                    live_a.append((int(n), int(s)))
+            for n, s, o in zip(np.asarray(nb), np.asarray(sb),
+                               np.asarray(okb)):
+                if o:
+                    live_b.append((int(n), int(s)))
+            assert len(live_a) == len(live_b)
+            assert int(pool_free_units(fpc, ta).sum()) == int(
+                pool_free_units(plain, tb).sum()
+            )
+            if step % 4 == 3 and live_a:
+                k = max(1, len(live_a) // 2)
+                idx = rng.choice(len(live_a), size=k, replace=False)
+                keep = [i for i in range(len(live_a)) if i not in set(idx)]
+                for pool, trees_, live in (
+                    (fpc, "a", live_a), (plain, "b", live_b)
+                ):
+                    drop = [live[i] for i in idx]
+                    fn = jnp.asarray([n for n, _ in drop], jnp.int32)
+                    fs = jnp.asarray([s for _, s in drop], jnp.int32)
+                    act = jnp.ones(k, bool)
+                    if trees_ == "a":
+                        ta, fa, _ = pool_wavefront_free(pool, ta, fn, fs, act)
+                        assert bool(fa.all())
+                    else:
+                        tb, fb, _ = pool_wavefront_free(pool, tb, fn, fs, act)
+                        assert bool(fb.all())
+                live_a = [live_a[i] for i in keep]
+                live_b = [live_b[i] for i in keep]
+
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_slab_exhaustion_spills_into_the_climb(self, name, layout):
+        """More leaf demand than slab slots: exactly n_slots requests
+        hit, the rest spill into the buddy climb, everyone succeeds."""
+        depth = 5
+        fpc, _ = _pair(depth, 1, layout)
+        n_slots = fpmod.fp_n_slots(fpc.tree, fpc.fastpath)
+        K = n_slots + 10
+        trees, nodes, _, ok, stats = _alloc(
+            fpc, fpc.empty_trees(), [depth] * K, np.arange(K)
+        )
+        assert bool(ok.all())
+        assert int(stats["fastpath_hits"]) == n_slots
+        assert int(stats["fastpath_spills"]) == K - n_slots
+        assert len(set(np.asarray(nodes).tolist())) == K  # no aliasing
+
+    @pytest.mark.parametrize("S", SHARDS)
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_full_fill_no_aliasing(self, name, layout, S):
+        """Filling the pool page by page hands out every leaf offset of
+        every shard exactly once — the slab and the tree can never serve
+        the same page (the carve-out invariant)."""
+        depth = 4
+        fpc, _ = _pair(depth, S, layout)
+        per = 1 << depth
+        total = S * per
+        trees, nodes, shard, ok, stats = _alloc(
+            fpc, fpc.empty_trees(), [depth] * total, np.arange(total)
+        )
+        assert bool(ok.all())
+        pages = sorted(
+            int(s) * per + int(n) - per
+            for n, s in zip(np.asarray(nodes), np.asarray(shard))
+        )
+        assert pages == list(range(total))
+        assert int(pool_free_units(fpc, trees).sum()) == 0
+        # one more request must fail cleanly
+        _, _, _, ok1, _ = _alloc(fpc, trees, [depth], [0])
+        assert not bool(ok1[0])
+
+    def test_stats_keys_always_present(self):
+        tree = TreeConfig(depth=4)
+        plain = PoolConfig(tree, 1)
+        _, _, _, _, stats = _alloc(plain, plain.empty_trees(), [4, 4], [0, 1])
+        assert int(stats["fastpath_hits"]) == 0
+        assert int(stats["fastpath_spills"]) == 0
+
+    def test_largest_run_sees_the_slab(self):
+        fpc, _ = _pair(4, 1, UNPACKED)
+        trees = fpc.empty_trees()
+        # empty carved pool: largest tree run is 3/4 of the shard
+        assert int(pool_largest_run(fpc, trees)) == 8
+        # fill everything, then release one slab page: the only free
+        # capacity is a slab slot and largest_run must report it
+        trees, nodes, _, ok, _ = _alloc(fpc, trees, [4] * 16, np.arange(16))
+        assert bool(ok.all())
+        assert int(pool_largest_run(fpc, trees)) == 0
+        slab_leaf = int(np.asarray(nodes).min())  # leftmost leaf = slab
+        trees, freed, _ = pool_wavefront_free(
+            fpc, trees, jnp.asarray([slab_leaf], jnp.int32),
+            jnp.zeros(1, jnp.int32), jnp.ones(1, bool),
+        )
+        assert bool(freed.all())
+        assert int(pool_free_units(fpc, trees).sum()) == 1
+        assert int(pool_largest_run(fpc, trees)) == 1
+
+
+class TestFastPathKernelParity:
+    """The Pallas pool kernel (interpret mode) against the reference
+    router on fastpath pools — slab words travel inside the VMEM row."""
+
+    @pytest.mark.parametrize("S", SHARDS)
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_step_parity(self, name, layout, S):
+        from repro.kernels.ops import nbbs_pool_wavefront_step
+
+        depth = 4
+        fpc, _ = _pair(depth, S, layout)
+        trees0 = fpc.empty_trees()
+        K = 10
+        lv = jnp.full((K,), depth, jnp.int32)
+        ids = jnp.arange(K, dtype=jnp.int32)
+        nf = jnp.zeros((K,), jnp.int32)
+        sf = jnp.zeros((K,), jnp.int32)
+        fa0 = jnp.zeros((K,), bool)
+        out = {}
+        for impl in ("reference", "interpret"):
+            t, n, s, ok, st = nbbs_pool_wavefront_step(
+                fpc, trees0, nf, sf, fa0, lv, lane_ids=ids, impl=impl
+            )
+            # mixed step: free half of what we just claimed, allocate more
+            half = jnp.asarray([i % 2 == 0 for i in range(K)]) & ok
+            t2, n2, s2, ok2, st2 = nbbs_pool_wavefront_step(
+                fpc, t, n, s, half, lv, lane_ids=ids + K, impl=impl
+            )
+            out[impl] = (t2, n, ok, n2, ok2, st["fastpath_hits"],
+                         st2["fastpath_hits"])
+        for a, b in zip(out["reference"], out["interpret"]):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        assert int(out["reference"][5]) > 0
+
+
+class TestFastPathEngine:
+    """Trace-replay regressions: the jit-resident engine with the
+    fastpath on must stay step-exact vs the host oracle and vs itself
+    with the fastpath off (same tokens, tables, retirements)."""
+
+    @classmethod
+    def setup_class(cls):
+        from repro.configs import get_config
+        from repro.models import init_params
+
+        cls.cfg = get_config("stablelm-3b").reduced()
+        cls.params = init_params(cls.cfg, jax.random.PRNGKey(0))
+
+    def _engine(self, **kw):
+        from repro.serve.jit_engine import JitServeEngine
+
+        base = dict(
+            num_pages=16, page_tokens=4, max_batch=4, max_lane_pages=8,
+            max_out=16, dtype=jnp.float32,
+        )
+        base.update(kw)
+        return JitServeEngine(self.cfg, self.params, **base)
+
+    @staticmethod
+    def _trace(seed, vocab, n=8):
+        rng = np.random.default_rng(seed)
+        return [
+            (
+                i,
+                rng.integers(
+                    0, vocab, size=int(rng.integers(1, 14))
+                ).astype(np.int32),
+                int(rng.integers(1, 8)),
+            )
+            for i in range(n)
+        ]
+
+    @pytest.mark.parametrize(
+        "n_shards,layout", [(1, "unpacked"), (2, "bunch-packed")]
+    )
+    def test_matches_host_oracle_with_fastpath(self, n_shards, layout):
+        from repro.serve.engine import Request
+        from repro.serve.oracle import HostOracleEngine
+
+        eng = self._engine(n_shards=n_shards, layout=layout, fastpath=True)
+        orc = HostOracleEngine(
+            num_pages=16, page_tokens=4, max_batch=4, max_lane_pages=8,
+            max_out=16, n_shards=n_shards, fastpath=True,
+        )
+        for i, p, mn in self._trace(3 * n_shards, self.cfg.vocab_size):
+            eng.submit(Request(i, p, mn))
+            orc.submit(Request(i, p.copy(), mn))
+        for _ in range(100):
+            eng._drain(), eng._admit()
+            orc._drain(), orc._admit()
+            assert sorted(eng.running) == sorted(orc.running)
+            if not eng.running and not eng.waiting:
+                break
+            for sid in eng.running:
+                assert (
+                    eng.device_block_table(sid) == orc.block_table(sid)
+                ).all(), sid
+            assert eng.device_free_pages() == orc.free_pages()
+            eng.decode_steps(1)
+            orc.decode_steps(1)
+        assert eng.retired_order == orc.retired_order
+        assert eng.done_steps == orc.done_steps
+        assert eng.device_free_pages() == orc.free_pages() == 16
+        tot = eng.stat_totals()
+        assert tot["fastpath_hits"] == orc.pool.fastpath_hits > 0
+        assert tot["fastpath_spills"] == orc.pool.fastpath_spills
+        orc.pool.check_invariants()
+
+    def test_fastpath_on_off_step_exact(self):
+        """The fast path is a pure mechanism change: with it on or off
+        the engine emits the same tokens, the same block tables, the
+        same retirement steps (leaf traffic is address-identical)."""
+        from repro.serve.engine import Request
+
+        e_on = self._engine(n_shards=2, fastpath=True)
+        e_off = self._engine(n_shards=2)
+        for i, p, mn in self._trace(13, self.cfg.vocab_size):
+            e_on.submit(Request(i, p, mn))
+            e_off.submit(Request(i, p.copy(), mn))
+        for _ in range(100):
+            e_on._drain(), e_on._admit()
+            e_off._drain(), e_off._admit()
+            assert sorted(e_on.running) == sorted(e_off.running)
+            if not e_on.running and not e_on.waiting:
+                break
+            for sid in e_on.running:
+                assert (
+                    e_on.device_block_table(sid)
+                    == e_off.device_block_table(sid)
+                ).all()
+            assert e_on.device_free_pages() == e_off.device_free_pages()
+            e_on.decode_steps(1)
+            e_off.decode_steps(1)
+        assert e_on.retired_order == e_off.retired_order
+        assert e_on.done_steps == e_off.done_steps
+        for sid in e_on.completed:
+            assert (
+                e_on.completed[sid].out_tokens
+                == e_off.completed[sid].out_tokens
+            )
+        assert e_on.stat_totals()["fastpath_hits"] > 0
+        assert e_off.stat_totals()["fastpath_hits"] == 0
+
+    def test_slab_probe_adds_no_host_sync(self):
+        """The fastpath decode loop stays transfer-free and re-trace-free
+        (the slab probe lives inside the compiled step)."""
+        from repro.serve import jit_engine as je
+        from repro.serve.engine import Request
+
+        eng = self._engine(fastpath=True)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(
+                i, rng.integers(0, self.cfg.vocab_size, 6).astype(np.int32), 8
+            ))
+        eng._drain(), eng._admit()
+        eng.decode_steps(1)  # compile outside the guard
+        traced = je.TRACE_COUNTS[eng.ecfg]
+        with jax.transfer_guard("disallow"):
+            eng.decode_steps(8)
+        assert je.TRACE_COUNTS[eng.ecfg] == traced  # zero re-traces

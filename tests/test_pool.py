@@ -238,9 +238,86 @@ class TestPoolStateAPI:
         assert (np.asarray(st2.trees) == np.asarray(st.trees)).all()
 
 
-# The hypothesis property for overflow routing (a pool trace never
-# double-allocates a (shard, node) pair) lives in tests/test_properties.py
-# with the other hypothesis suites so this module stays dependency-free.
+class TestPoolFastPathHandles:
+    """Handle semantics with the bitmap-slab front end in the pool
+    (core/fastpath.py): handles stay ordinary (shard, node) pairs."""
+
+    @pytest.mark.parametrize("use_fastpath", [False, True],
+                             ids=["plain", "fastpath"])
+    def test_free_then_realloc_same_handle_after_overflow(
+        self, use_fastpath
+    ):
+        """A handle served by overflow routing round-trips: freeing it
+        and re-requesting with the same lane id lands on the same
+        (shard, node) — whether the successor shard served it from the
+        slab or the tree (the home shard is still full, so the probe
+        path repeats deterministically)."""
+        from repro.core.fastpath import FastPathConfig
+
+        fp = FastPathConfig(level=None, slab_level=2) if use_fastpath else None
+        pcfg = PoolConfig(TreeConfig(depth=4), 4, fastpath=fp)
+        K = 17  # 16 leaves per shard + 1 overflow lane
+        lane_ids = jnp.zeros(K, jnp.int32)
+        home = int(home_shard(pcfg, lane_ids)[0])
+        lv = jnp.full(K, 4, jnp.int32)
+        trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), lv, jnp.ones(K, bool), 64, lane_ids
+        )
+        assert bool(ok.all())
+        sh = np.asarray(shard)
+        over = int(np.nonzero(sh != home)[0][0])
+        h_node, h_shard = int(nodes[over]), int(sh[over])
+        assert h_shard == (home + 1) % 4
+        trees, freed, _ = pool_wavefront_free(
+            pcfg, trees, jnp.asarray([h_node], jnp.int32),
+            jnp.asarray([h_shard], jnp.int32), jnp.ones(1, bool),
+        )
+        assert bool(freed.all())
+        trees, n2, s2, ok2, _ = pool_wavefront_alloc(
+            pcfg, trees, jnp.full(1, 4, jnp.int32), jnp.ones(1, bool),
+            64, jnp.zeros(1, jnp.int32),
+        )
+        assert bool(ok2[0])
+        assert (int(n2[0]), int(s2[0])) == (h_node, h_shard)
+
+    def test_junk_handles_into_slab_range_dropped(self):
+        """Regression: handles pointing *into* the carved region — an
+        unallocated slab leaf, the carve node itself, an interior node
+        of the carved subtree, a node on the carve path — are dropped,
+        never release slab bits or corrupt the pre-marked subtree."""
+        from repro.core.fastpath import FastPathConfig
+
+        pcfg = PoolConfig(
+            TreeConfig(depth=4), 2,
+            fastpath=FastPathConfig(level=None, slab_level=2),
+        )
+        trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+            pcfg, pcfg.empty_trees(), jnp.full(2, 4, jnp.int32),
+            jnp.ones(2, bool), 64, jnp.asarray([0, 1], jnp.int32),
+        )
+        assert bool(ok.all())
+        before = np.asarray(trees)
+        # slab covers leaves 16..19; lanes above claimed some of them.
+        # Junk: an unclaimed slab leaf on the other shard, the carve
+        # node (4), a carved-subtree interior (8), path nodes (1, 2).
+        other = 1 - int(shard[0])
+        junk_nodes = jnp.asarray([19, 4, 8, 1, 2], jnp.int32)
+        junk_shards = jnp.asarray([other, 0, 0, 1, 1], jnp.int32)
+        t2, freed, _ = pool_wavefront_free(
+            pcfg, trees, junk_nodes, junk_shards, jnp.ones(5, bool)
+        )
+        assert not bool(freed.any())
+        assert (np.asarray(t2) == before).all()
+        # the real handles still release fine afterwards
+        t3, freed3, _ = pool_wavefront_free(pcfg, t2, nodes, shard, ok)
+        assert bool(freed3.all())
+        assert (np.asarray(t3) == np.asarray(pcfg.empty_trees())).all()
+
+
+# The hypothesis properties for overflow routing (a pool trace never
+# double-allocates a (shard, node) pair — with and without the fastpath
+# slab) live in tests/test_properties.py with the other hypothesis
+# suites so this module stays dependency-free.
 
 
 class TestPoolLayouts:

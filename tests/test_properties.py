@@ -304,6 +304,89 @@ def test_pool_never_double_allocates_across_shards(ops, S, seed):
     assert (np.asarray(trees) == 0).all()
 
 
+@given(
+    op_stream(30),
+    st.sampled_from([1, 4]),
+    st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+@pytest.mark.fastpath
+def test_fastpath_pool_safety_on_any_trace(ops, S, seed):
+    """Fast-path safety (S1/S2 with the slab in the loop): random
+    interleaved alloc/free traces on a fastpath pool never hand the
+    same (shard, node) to two live owners — the slab and the buddy
+    climb can never alias, because the slab subtree is pre-marked
+    occupied — never leak units when a round fails, and every
+    free(alloc(x)) round-trips whether x was served by the slab or the
+    tree (handles are path-agnostic).  Draining returns every tree to
+    the carved baseline."""
+    from repro.core.fastpath import FastPathConfig
+    from repro.core.pool import pool_free_units
+
+    depth = 4
+    pcfg = PoolConfig(
+        TreeConfig(depth=depth), S,
+        fastpath=FastPathConfig(level=None, slab_level=2),
+    )
+    trees = pcfg.empty_trees()
+    baseline = np.asarray(pcfg.empty_trees())
+    total = S << depth
+    rng = np.random.default_rng(seed)
+    live = {}  # (shard, node) -> units
+    for is_alloc, r in ops:
+        if not is_alloc and live:
+            k = 1 + r % len(live)
+            keys = list(live)
+            idx = rng.choice(len(keys), size=k, replace=False)
+            sel = [keys[i] for i in idx]
+            fn = jnp.asarray([n for _, n in sel], jnp.int32)
+            fs = jnp.asarray([s for s, _ in sel], jnp.int32)
+            trees, freed, _ = pool_wavefront_free(
+                pcfg, trees, fn, fs, jnp.ones(k, bool)
+            )
+            assert bool(freed.all())  # live handles always release
+            for key in sel:
+                del live[key]
+        else:
+            K = 1 + r % 6
+            # bias toward the fast octave so the slab stays hot, with
+            # coarse chunks mixed in to exercise the spill boundary
+            lv = jnp.asarray(
+                [
+                    depth if (r >> i) & 1 else 2 + (r >> (2 * i)) % 3
+                    for i in range(K)
+                ],
+                jnp.int32,
+            )
+            ids = jnp.asarray(rng.integers(0, 1000, size=K), jnp.int32)
+            trees, nodes, shard, ok, _ = pool_wavefront_alloc(
+                pcfg, trees, lv, jnp.ones(K, bool), 64, ids
+            )
+            for n, s, o, L in zip(
+                np.asarray(nodes), np.asarray(shard), np.asarray(ok),
+                np.asarray(lv),
+            ):
+                if not o:
+                    continue
+                key = (int(s), int(n))
+                assert key not in live, "slab/tree double allocation!"
+                level = int(n).bit_length() - 1
+                assert level == int(L)
+                live[key] = (1 << depth) >> level
+        # no leaks: free units account for exactly the live allocations
+        assert int(pool_free_units(pcfg, trees).sum()) == total - sum(
+            live.values()
+        )
+    if live:
+        fn = jnp.asarray([n for _, n in live], jnp.int32)
+        fs = jnp.asarray([s for s, _ in live], jnp.int32)
+        trees, freed, _ = pool_wavefront_free(
+            pcfg, trees, fn, fs, jnp.ones(len(live), bool)
+        )
+        assert bool(freed.all())
+    assert (np.asarray(trees) == baseline).all()
+
+
 @given(op_stream(40))
 @settings(max_examples=20, deadline=None)
 def test_wavefront_matches_ref_single_requests(ops):
