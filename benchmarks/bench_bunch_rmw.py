@@ -26,7 +26,13 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import WavefrontAllocator, dump_bench_json, row
+from benchmarks.common import (
+    WavefrontAllocator,
+    bench_envelope,
+    bench_record,
+    dump_bench_json,
+    row,
+)
 from repro.core.bunch import BunchBuddy
 from repro.core.concurrent import (
     BUNCH_PACKED,
@@ -174,36 +180,44 @@ def _device_layout_sweep() -> None:
             "packed climb writes must be strictly below unpacked",
             workload, rp["merged_writes"], ru["merged_writes"],
         )
-        rec = {
-            "workload": workload,
-            "depth": DEV_DEPTH,
-            "width": DEV_WIDTH,
-            "fast_mode": FAST,
-            "n_words": cu.n_state_words,
-            "n_state_words": cp.n_state_words,
-            "state_ratio": cp.n_state_words / cu.n_state_words,
-            "unpacked_merged_writes": ru["merged_writes"],
-            "packed_merged_writes": rp["merged_writes"],
-            "unpacked_logical_rmws": ru["logical_rmws"],
-            "packed_logical_rmws": rp["logical_rmws"],
-            "merged_reduction": ru["merged_writes"]
-            / max(rp["merged_writes"], 1),
-        }
-        assert rec["state_ratio"] <= 0.25
+        rec = bench_record(
+            dims={"workload": workload, "depth": DEV_DEPTH,
+                  "width": DEV_WIDTH, "fast_mode": FAST,
+                  "unpacked_state_words": cu.n_state_words,
+                  "packed_state_words": cp.n_state_words},
+            metrics={
+                "state_ratio": cp.n_state_words / cu.n_state_words,
+                "unpacked_merged_writes": ru["merged_writes"],
+                "packed_merged_writes": rp["merged_writes"],
+                "unpacked_logical_rmws": ru["logical_rmws"],
+                "packed_logical_rmws": rp["logical_rmws"],
+                "merged_reduction": ru["merged_writes"]
+                / max(rp["merged_writes"], 1),
+            },
+        )
+        m = rec["metrics"]
+        assert m["state_ratio"] <= 0.25
         records.append(rec)
         row(
             "bunch_layout_sweep", workload, DEV_WIDTH, DEV_WIDTH, 1e-9,
             extra=(
-                f"unpacked_merged={rec['unpacked_merged_writes']};"
-                f"packed_merged={rec['packed_merged_writes']};"
-                f"reduction={rec['merged_reduction']:.2f}x;"
-                f"state_ratio={rec['state_ratio']:.3f}"
+                f"unpacked_merged={m['unpacked_merged_writes']};"
+                f"packed_merged={m['packed_merged_writes']};"
+                f"reduction={m['merged_reduction']:.2f}x;"
+                f"state_ratio={m['state_ratio']:.3f}"
             ),
         )
     if not FAST:
         # never clobber the committed full-run trajectory with the
         # tiny smoke geometry
-        dump_bench_json("BENCH_BUNCH_LAYOUT.json", records)
+        dump_bench_json(
+            "BENCH_BUNCH_LAYOUT.json",
+            bench_envelope(
+                "bench_bunch_rmw/layout_sweep",
+                {"depth": DEV_DEPTH, "width": DEV_WIDTH},
+                records,
+            ),
+        )
 
 
 def run() -> None:

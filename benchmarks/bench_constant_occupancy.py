@@ -26,6 +26,8 @@ import numpy as np
 from benchmarks.common import (
     WIDTHS,
     WavefrontAllocator,
+    bench_envelope,
+    bench_record,
     dump_bench_json,
     level_for,
     make_host_allocators,
@@ -125,18 +127,19 @@ def run() -> None:
             logical_total += int(stats["free_logical_rmws"])
         jax.block_until_ready(trees)
         dt = time.perf_counter() - t0
-        rec = {
-            "n_shards": S,
-            "shard_depth": sd,
-            "width": W,
-            "churn_steps": CHURN_STEPS,
-            "rounds_total": rounds_total,
-            "ok_final": int(ok.sum()),
-            "free_merged_writes": merged_total,
-            "free_logical_rmws": logical_total,
-            "free_ratio": merged_total / max(logical_total, 1),
-            "seconds": dt,
-        }
+        free_ratio = merged_total / max(logical_total, 1)
+        rec = bench_record(
+            dims={"n_shards": S, "shard_depth": sd, "width": W,
+                  "churn_steps": CHURN_STEPS},
+            metrics={
+                "rounds_total": rounds_total,
+                "ok_final": int(ok.sum()),
+                "free_merged_writes": merged_total,
+                "free_logical_rmws": logical_total,
+                "free_ratio": free_ratio,
+                "seconds": dt,
+            },
+        )
         shard_records.append(rec)
         row(
             "constant_occupancy_shard_sweep", f"pool-s{S}", W,
@@ -144,7 +147,7 @@ def run() -> None:
             extra=(
                 f"rounds_total={rounds_total};"
                 f"free_merged={merged_total};free_logical={logical_total};"
-                f"ratio={rec['free_ratio']:.3f}"
+                f"ratio={free_ratio:.3f}"
             ),
         )
         assert merged_total < logical_total, (
@@ -153,7 +156,13 @@ def run() -> None:
         )
     if not FAST:
         dump_bench_json(
-            "BENCH_CONSTANT_OCCUPANCY_SHARDS.json", shard_records
+            "BENCH_CONSTANT_OCCUPANCY_SHARDS.json",
+            bench_envelope(
+                "bench_constant_occupancy/shard_sweep",
+                {"total_depth": TOTAL_DEPTH, "width": W,
+                 "churn_steps": CHURN_STEPS},
+                shard_records,
+            ),
         )
 
     fastpath_sweep()
@@ -203,33 +212,33 @@ def fastpath_sweep() -> None:
             dt = time.perf_counter() - t0
             assert bool(ok.all())
             ops = CHURN * W  # alloc ops (each paired with one free)
-            rec = {
-                "n_shards": S,
-                "fastpath": use_fp,
-                "depth": DEPTH,
-                "width": W,
-                "churn_steps": CHURN,
-                "merged_writes": tot["merged"],
-                "logical_rmws": tot["logical"],
-                "free_merged_writes": tot["free_merged"],
-                "free_logical_rmws": tot["free_logical"],
-                "fastpath_hits": tot["hits"],
-                "fastpath_spills": tot["spills"],
-                "merged_per_op": (
-                    (tot["merged"] + tot["free_merged"]) / ops
-                ),
-                "logical_per_alloc": tot["logical"] / ops,
-                "seconds": dt,
-            }
-            per_mode[use_fp] = rec
+            rec = bench_record(
+                dims={"n_shards": S, "fastpath": use_fp, "depth": DEPTH,
+                      "width": W, "churn_steps": CHURN},
+                metrics={
+                    "merged_writes": tot["merged"],
+                    "logical_rmws": tot["logical"],
+                    "free_merged_writes": tot["free_merged"],
+                    "free_logical_rmws": tot["free_logical"],
+                    "fastpath_hits": tot["hits"],
+                    "fastpath_spills": tot["spills"],
+                    "merged_per_op": (
+                        (tot["merged"] + tot["free_merged"]) / ops
+                    ),
+                    "logical_per_alloc": tot["logical"] / ops,
+                    "seconds": dt,
+                },
+            )
+            per_mode[use_fp] = rec["metrics"]
             records.append(rec)
             row(
                 "constant_occupancy_fastpath",
                 f"pool-s{S}-{'slab' if use_fp else 'climb'}", W, 2 * ops,
                 dt,
                 extra=(
-                    f"merged/op={rec['merged_per_op']:.3f};"
-                    f"logical/alloc={rec['logical_per_alloc']:.3f};"
+                    f"merged/op={rec['metrics']['merged_per_op']:.3f};"
+                    f"logical/alloc="
+                    f"{rec['metrics']['logical_per_alloc']:.3f};"
                     f"hits={tot['hits']};spills={tot['spills']}"
                 ),
             )
@@ -241,7 +250,14 @@ def fastpath_sweep() -> None:
         ), per_mode
         assert per_mode[True]["fastpath_hits"] > 0
     if not FAST:
-        dump_bench_json("BENCH_FASTPATH.json", records)
+        dump_bench_json(
+            "BENCH_FASTPATH.json",
+            bench_envelope(
+                "bench_constant_occupancy/fastpath_sweep",
+                {"depth": DEPTH, "churn_steps": CHURN},
+                records,
+            ),
+        )
 
 
 if __name__ == "__main__":

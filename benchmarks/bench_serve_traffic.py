@@ -22,6 +22,14 @@ rejected / overflow retirements) and allocator counters (merged writes
 per alloc, probe overflows), plus a per-chunk occupancy trajectory
 (active lanes, free pages, completions over time).
 
+One extra jit run repeats the first configuration with the full
+telemetry plane enabled (`ring_capacity > 0`): its steady-state decode
+throughput vs the telemetry-off twin is the measured observability
+overhead (must stay under 3%), and its drained
+`JitServeEngine.snapshot()` is written to
+BENCH_SERVE_TRAFFIC_SNAPSHOT.json — the artifact
+`tools/obsdump.py --trace` renders as a Perfetto timeline.
+
 Latency is measured in *steps* on the engine's own decode clock, so
 both engines see identical arrival schedules regardless of wall speed;
 seconds are derived from each engine's measured per-step wall time.
@@ -46,6 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
+    bench_envelope,
+    bench_record,
     dump_bench_json,
     poisson_traffic,
     quantiles_steps,
@@ -76,6 +86,8 @@ CHUNK = 4 if FAST else 8  # scan-fused steps per dispatch
 SHARDS = (1,) if FAST else (1, 4)
 LAYOUTS = ("unpacked",) if FAST else ("unpacked", "bunch-packed")
 SEED = 0
+RING_CAP = 128 if FAST else 4096  # event ring size of the telemetry run
+SNAPSHOT_FILE = "BENCH_SERVE_TRAFFIC_SNAPSHOT.json"
 
 
 def _trace():
@@ -107,12 +119,13 @@ def steady_toks_per_s(trajectory, n_requests) -> float | None:
 
 
 def run_jit(cfg, params, trace, prompts, n_shards, layout,
-            fastpath=False) -> dict:
+            fastpath=False, telemetry=False, snapshot_path=None) -> dict:
     eng = JitServeEngine(
         cfg, params, num_pages=NUM_PAGES, page_tokens=PAGE_TOKENS,
         max_batch=MAX_BATCH, max_lane_pages=MAX_LANE_PAGES,
         max_out=MAX_OUT, dtype=jnp.float32, n_shards=n_shards,
         layout=layout, fastpath=fastpath,
+        ring_capacity=RING_CAP if telemetry else 0,
     )
     pending = deque(trace)
     arrival = {t.req_id: t.arrival_step for t in trace}
@@ -151,15 +164,7 @@ def run_jit(cfg, params, trace, prompts, n_shards, layout,
     q = quantiles_steps(lat)
     step_s = wall / steps
     tot = eng.stat_totals()
-    rec = {
-        "engine": "jit",
-        "layout": layout,
-        "n_shards": n_shards,
-        "fastpath": fastpath,
-        "n_requests": len(trace),
-        "max_batch": MAX_BATCH,
-        "num_pages": NUM_PAGES,
-        "chunk": CHUNK,
+    metrics = {
         "wall_s": wall,
         "decode_steps": eng.stats["steps"],
         "tokens_out": toks,
@@ -181,14 +186,31 @@ def run_jit(cfg, params, trace, prompts, n_shards, layout,
         ),
         "fastpath_hits": tot["fastpath_hits"],
         "fastpath_spills": tot["fastpath_spills"],
-        "free_pages_final": eng.device_free_pages(),
-        "trajectory": trajectory,
+        "free_pages": eng.device_free_pages(),
     }
-    tag = f"jit-{layout}-S{n_shards}" + ("-fp" if fastpath else "")
+    if telemetry:
+        metrics["ring_events"] = tot["ring_events"]
+        metrics["ring_dropped"] = tot["ring_dropped"]
+    rec = bench_record(
+        dims={
+            "engine": "jit", "layout": layout, "n_shards": n_shards,
+            "fastpath": fastpath, "telemetry": telemetry,
+            "n_requests": len(trace), "max_batch": MAX_BATCH,
+            "num_pages": NUM_PAGES, "chunk": CHUNK,
+        },
+        metrics={k: v for k, v in metrics.items() if v is not None},
+    )
+    rec["trajectory"] = trajectory
+    if telemetry and snapshot_path:
+        with open(snapshot_path, "w") as f:
+            json.dump(eng.snapshot(), f, indent=2, sort_keys=True)
+            f.write("\n")
+    tag = (f"jit-{layout}-S{n_shards}" + ("-fp" if fastpath else "")
+           + ("-tel" if telemetry else ""))
     row(
         "serve_traffic", tag, MAX_BATCH, toks, wall,
         extra=(
-            f"steady={rec['steady_toks_per_s']};"
+            f"steady={metrics['steady_toks_per_s']};"
             f"p50={q['p50']};p99={q['p99']};"
             f"queued_full={eng.stats['queued_full']};"
             f"overflow={eng.stats['overflow_retired']};"
@@ -245,15 +267,7 @@ def run_host(cfg, params, trace, prompts, n_shards) -> dict:
     ]
     q = quantiles_steps(lat)
     step_s = wall / max(clock, 1)
-    rec = {
-        "engine": "host",
-        "layout": "unpacked",
-        "n_shards": n_shards,
-        "fastpath": False,
-        "n_requests": len(trace),
-        "max_batch": MAX_BATCH,
-        "num_pages": NUM_PAGES,
-        "chunk": 1,
+    metrics = {
         "wall_s": wall,
         "decode_steps": clock,
         "tokens_out": toks,
@@ -269,12 +283,21 @@ def run_host(cfg, params, trace, prompts, n_shards) -> dict:
         "overflow_retired": 0,
         "fastpath_hits": eng.kv.fastpath_hits,
         "fastpath_spills": eng.kv.fastpath_spills,
-        "free_pages_final": eng.kv.free_pages(),
-        "trajectory": trajectory,
+        "free_pages": eng.kv.free_pages(),
     }
+    rec = bench_record(
+        dims={
+            "engine": "host", "layout": "unpacked",
+            "n_shards": n_shards, "fastpath": False, "telemetry": False,
+            "n_requests": len(trace), "max_batch": MAX_BATCH,
+            "num_pages": NUM_PAGES, "chunk": 1,
+        },
+        metrics={k: v for k, v in metrics.items() if v is not None},
+    )
+    rec["trajectory"] = trajectory
     row(
         "serve_traffic", f"host-S{n_shards}", MAX_BATCH, toks, wall,
-        extra=f"steady={rec['steady_toks_per_s']};"
+        extra=f"steady={metrics['steady_toks_per_s']};"
               f"p50={q['p50']};p99={q['p99']};"
               f"queued_full={eng.stats['queued_full']}",
     )
@@ -285,7 +308,7 @@ def _run_single(spec: str, out_path: str) -> None:
     """Worker mode: one engine run in a fresh process (each full-scale
     run compiles sizeable executables; process isolation keeps every
     configuration's compile + pool memory independent)."""
-    engine, layout, n_shards, fastpath = spec.split(":")
+    engine, layout, n_shards, fastpath, telemetry = spec.split(":")
     cfg = get_config("stablelm-3b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     trace = _trace()
@@ -293,7 +316,8 @@ def _run_single(spec: str, out_path: str) -> None:
     if engine == "jit":
         rec = run_jit(
             cfg, params, trace, prompts, int(n_shards), layout,
-            fastpath=fastpath == "1",
+            fastpath=fastpath == "1", telemetry=telemetry == "1",
+            snapshot_path=out_path + ".snap",
         )
     else:
         rec = run_host(cfg, params, trace, prompts, int(n_shards))
@@ -305,13 +329,17 @@ def run() -> None:
     specs = []
     for n_shards in SHARDS:
         for layout in LAYOUTS:
-            specs.append(f"jit:{layout}:{n_shards}:0")
+            specs.append(f"jit:{layout}:{n_shards}:0:0")
         # the slab front end rides the first layout (page churn is
         # layout-agnostic: the slab words sit outside the tree words)
-        specs.append(f"jit:{LAYOUTS[0]}:{n_shards}:1")
-        specs.append(f"host:unpacked:{n_shards}:0")
+        specs.append(f"jit:{LAYOUTS[0]}:{n_shards}:1:0")
+        specs.append(f"host:unpacked:{n_shards}:0:0")
+    # the telemetry twin: the first configuration at the largest shard
+    # count, re-run with the event ring + full metrics plane enabled
+    specs.append(f"jit:{LAYOUTS[0]}:{SHARDS[-1]}:0:1")
 
     records = []
+    snapshot = None
     with tempfile.TemporaryDirectory() as td:
         for i, spec in enumerate(specs):
             out = os.path.join(td, f"rec{i}.json")
@@ -322,6 +350,9 @@ def run() -> None:
             )
             with open(out) as f:
                 records.append(json.load(f))
+            if os.path.exists(out + ".snap"):
+                with open(out + ".snap") as f:
+                    snapshot = json.load(f)
 
     # the tentpole claim: fused in-graph serving beats the host loop on
     # steady-state decode throughput, same trace, same shard count
@@ -330,20 +361,50 @@ def run() -> None:
     speedups = {}
     for n_shards in SHARDS:
         jit_t = max(
-            r["steady_toks_per_s"] or 0.0 for r in records
-            if r["engine"] == "jit" and r["n_shards"] == n_shards
+            r["metrics"].get("steady_toks_per_s") or 0.0 for r in records
+            if r["dims"]["engine"] == "jit"
+            and r["dims"]["n_shards"] == n_shards
+            and not r["dims"]["telemetry"]
         )
         host_t = next(
-            r["steady_toks_per_s"] or 1e-9 for r in records
-            if r["engine"] == "host" and r["n_shards"] == n_shards
+            r["metrics"].get("steady_toks_per_s") or 1e-9 for r in records
+            if r["dims"]["engine"] == "host"
+            and r["dims"]["n_shards"] == n_shards
         )
         speedups[f"S{n_shards}"] = jit_t / max(host_t, 1e-9)
         print(f"# jit/host steady decode throughput S={n_shards}: "
               f"{speedups[f'S{n_shards}']:.2f}x")
+
+    # the observability claim: the telemetry plane rides the compiled
+    # step for (nearly) free — steady throughput off/on stays below 3%
+    overhead = None
+    tel_on = next((r for r in records if r["dims"]["telemetry"]), None)
+    if tel_on is not None:
+        d = tel_on["dims"]
+        tel_off = next(
+            r for r in records
+            if r["dims"]["engine"] == "jit"
+            and not r["dims"]["telemetry"]
+            and r["dims"]["layout"] == d["layout"]
+            and r["dims"]["n_shards"] == d["n_shards"]
+            and r["dims"]["fastpath"] == d["fastpath"]
+        )
+        on_t = tel_on["metrics"].get("steady_toks_per_s") or 0.0
+        off_t = tel_off["metrics"].get("steady_toks_per_s") or 0.0
+        if on_t and off_t:
+            overhead = off_t / on_t
+            print(f"# telemetry overhead (off/on steady toks/s): "
+                  f"{overhead:.4f}x  (off={off_t:.1f} on={on_t:.1f})")
+
     if not FAST:
         assert all(s > 1.0 for s in speedups.values()), speedups
-        dump_bench_json("BENCH_SERVE_TRAFFIC.json", {
-            "config": {
+        assert overhead is not None and overhead < 1.03, (
+            "telemetry-on steady throughput regressed >=3% vs off",
+            overhead,
+        )
+        dump_bench_json("BENCH_SERVE_TRAFFIC.json", bench_envelope(
+            "bench_serve_traffic/heavy_traffic",
+            {
                 "n_requests": N_REQ,
                 "rate_per_step": RATE,
                 "num_pages": NUM_PAGES,
@@ -356,11 +417,15 @@ def run() -> None:
                 "out_mean": OUT_MEAN,
                 "chunk": CHUNK,
                 "seed": SEED,
+                "ring_capacity": RING_CAP,
                 "arch": "stablelm-3b (reduced)",
             },
-            "jit_vs_host_speedup": speedups,
-            "records": records,
-        })
+            records,
+            jit_vs_host_speedup=speedups,
+            telemetry_overhead=overhead,
+        ))
+        if snapshot is not None:
+            dump_bench_json(SNAPSHOT_FILE, snapshot)
 
 
 if __name__ == "__main__":

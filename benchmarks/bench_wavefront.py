@@ -17,7 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import dump_bench_json, row
+from benchmarks.common import (
+    bench_envelope,
+    bench_record,
+    dump_bench_json,
+    row,
+)
 from repro.core.concurrent import (
     BUNCH_PACKED,
     TreeConfig,
@@ -189,37 +194,38 @@ def run() -> None:
         trees, freed, fstats = pool_wavefront_free(
             pcfg, trees, nodes, shard, ok
         )
-        rec = {
-            "n_shards": S,
-            "shard_depth": sd,
-            "width": K,
-            "demand_units": int(sizes.sum()),
-            "capacity_units": 1 << SHARD_TOTAL_DEPTH,
-            "rounds": int(stats["rounds"]),
-            "ok": int(ok.sum()),
-            "overflows": int(stats["overflows"]),
-            "merged_writes": int(stats["merged_writes"]),
-            "logical_rmws": int(stats["logical_rmws"]),
-            "free_merged_writes": int(fstats["merged_writes"]),
-            "free_logical_rmws": int(fstats["logical_rmws"]),
-            "free_merged_per_shard": free_ms,
-            "free_logical_per_shard": free_ls,
-            "seconds_per_burst": dt / REPS,
-        }
+        rec = bench_record(
+            dims={"n_shards": S, "shard_depth": sd, "width": K,
+                  "capacity_units": 1 << SHARD_TOTAL_DEPTH},
+            metrics={
+                "demand_units": int(sizes.sum()),
+                "rounds": int(stats["rounds"]),
+                "ok": int(ok.sum()),
+                "overflows": int(stats["overflows"]),
+                "merged_writes": int(stats["merged_writes"]),
+                "logical_rmws": int(stats["logical_rmws"]),
+                "free_merged_writes": int(fstats["merged_writes"]),
+                "free_logical_rmws": int(fstats["logical_rmws"]),
+                "free_merged_per_shard": free_ms,
+                "free_logical_per_shard": free_ls,
+                "seconds_per_burst": dt / REPS,
+            },
+        )
         shard_records.append(rec)
+        m = rec["metrics"]
         row(
             "wavefront_shard_sweep", f"pool-s{S}", K, REPS * K, dt,
             extra=(
-                f"rounds={rec['rounds']};ok={rec['ok']};"
-                f"overflows={rec['overflows']};"
-                f"merged={rec['merged_writes']};"
-                f"logical={rec['logical_rmws']};"
-                f"free_merged={rec['free_merged_writes']};"
-                f"free_logical={rec['free_logical_rmws']}"
+                f"rounds={m['rounds']};ok={m['ok']};"
+                f"overflows={m['overflows']};"
+                f"merged={m['merged_writes']};"
+                f"logical={m['logical_rmws']};"
+                f"free_merged={m['free_merged_writes']};"
+                f"free_logical={m['free_logical_rmws']}"
             ),
         )
-    by_s = {r["n_shards"]: r for r in shard_records}
-    assert all(r["ok"] == K for r in shard_records), (
+    by_s = {r["dims"]["n_shards"]: r["metrics"] for r in shard_records}
+    assert all(r["metrics"]["ok"] == K for r in shard_records), (
         "the burst must complete on every pool size", shard_records
     )
     if not FAST:
@@ -227,7 +233,15 @@ def run() -> None:
             "S=4 must complete the saturating burst in fewer rounds than S=1",
             by_s[4]["rounds"], by_s[1]["rounds"],
         )
-        dump_bench_json("BENCH_WAVEFRONT_SHARDS.json", shard_records)
+        dump_bench_json(
+            "BENCH_WAVEFRONT_SHARDS.json",
+            bench_envelope(
+                "bench_wavefront/shard_sweep",
+                {"total_depth": SHARD_TOTAL_DEPTH, "width": K,
+                 "reps": REPS},
+                shard_records,
+            ),
+        )
 
     # fragmented-tree behaviour: occupancy ~50% at mixed levels
     tree = cfg.empty_tree()

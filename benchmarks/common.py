@@ -27,11 +27,46 @@ from repro.core.ref import NBBSRef
 
 WIDTHS = (1, 2, 4, 8, 16, 32)
 
+# Every BENCH_*.json artifact carries this envelope version;
+# tools/check_bench_schema.py validates it (and every metric name
+# against repro/obs/schema.py) in the CI bench-smoke job.
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_record(dims: dict, metrics: dict) -> dict:
+    """One standardized benchmark record: `dims` are the workload axes
+    that vary across records (shard count, layout, telemetry mode...),
+    `metrics` are named observables — every key must be registered in
+    the obs schema, so benchmarks cannot invent counters that drift
+    from the kernels' and the engine's."""
+    from repro.obs.schema import spec
+
+    for name in metrics:
+        spec(name)  # raises on unregistered metric names
+    return {"dims": dims, "metrics": metrics}
+
+
+def bench_envelope(
+    benchmark: str, config: dict, records: List[dict], **extra
+) -> dict:
+    """The standardized BENCH_*.json envelope (schema_version,
+    benchmark name, workload config, bench_record list)."""
+    out = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "config": config,
+        "records": records,
+    }
+    out.update(extra)
+    return out
+
 
 def dump_bench_json(filename: str, payload) -> str:
     """Persist a benchmark section's records as a JSON artifact at the
     repo root (BENCH_*.json — the scaling-trajectory record the docs
-    and later PRs compare against).  Returns the path written."""
+    and later PRs compare against).  Payloads must be `bench_envelope`
+    objects — the CI schema check rejects bare record lists.  Returns
+    the path written."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     path = os.path.join(root, filename)
     with open(path, "w") as f:

@@ -63,8 +63,16 @@ from repro.core import fastpath as fpmod
 from repro.core.bits import FIB_HASH
 from repro.core.concurrent import TreeConfig, alloc_round, free_round
 from repro.core.fastpath import FastPathConfig
+from repro.obs.schema import POOL_STEP_SLOTS, spec as metric_spec
 
 Array = jax.Array
+
+
+def _named(stats: dict) -> dict:
+    """Every stats key must be a registered metric (obs/schema.py)."""
+    for name in stats:
+        metric_spec(name)  # raises on unregistered names
+    return stats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -307,14 +315,14 @@ def pool_wavefront_alloc(
     else:
         fast = levels == fpmod.fp_level(pcfg.tree, pcfg.fastpath)
         fast_total = (active & fast).sum(dtype=jnp.int32)
-    stats = {
+    stats = _named({
         "rounds": rounds,
         "merged_writes": merged,
         "logical_rmws": logical,
         "overflows": (ok & (shard != home)).sum(dtype=jnp.int32),
         "fastpath_hits": hits,
         "fastpath_spills": fast_total - hits,
-    }
+    })
     return trees, nodes, shard, ok, stats
 
 
@@ -448,7 +456,9 @@ def pool_wavefront_free(
     trees, merged, logical, freed = pool_free_round(
         pcfg, trees, nodes, shard, active
     )
-    return trees, freed, {"merged_writes": merged, "logical_rmws": logical}
+    return trees, freed, _named(
+        {"merged_writes": merged, "logical_rmws": logical}
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(0, 7))
@@ -479,4 +489,9 @@ def pool_wavefront_step(
     stats["free_merged_writes"] = free_merged
     stats["free_logical_rmws"] = free_logical
     stats["freed"] = freed.sum(dtype=jnp.int32)
-    return trees, nodes, shard, ok, stats
+    # the reference path must expose at least the Pallas kernel's slots,
+    # so every impl of nbbs_pool_wavefront_step names the same metrics
+    missing = set(POOL_STEP_SLOTS) - set(stats)
+    if missing:  # pragma: no cover - drift guard
+        raise KeyError(f"pool step stats missing schema slots {missing}")
+    return trees, nodes, shard, ok, _named(stats)

@@ -73,6 +73,12 @@ from jax.experimental import pallas as pl
 from repro.core import fastpath
 from repro.core.concurrent import TreeConfig, alloc_round, free_round
 from repro.core.pool import PoolConfig
+from repro.obs.schema import (
+    POOL_STEP_SLOTS,
+    WAVEFRONT_ALLOC_SLOTS,
+    WAVEFRONT_STEP_SLOTS,
+    pack_slots,
+)
 
 Array = jax.Array
 
@@ -116,7 +122,12 @@ def _wavefront_kernel(
     )
     tree_out_ref[...] = tree
     nodes_ref[...] = nodes
-    stats_ref[...] = jnp.stack([rounds, merged, logical])
+    # slot order is the schema's, not this file's (tests/test_obs.py)
+    stats_ref[...] = pack_slots(WAVEFRONT_ALLOC_SLOTS, {
+        "rounds": rounds,
+        "merged_writes": merged,
+        "logical_rmws": logical,
+    })
 
 
 def _wavefront_step_kernel(
@@ -168,9 +179,14 @@ def _wavefront_step_kernel(
     )
     tree_out_ref[...] = tree
     nodes_ref[...] = nodes
-    stats_ref[...] = jnp.stack(
-        [rounds, merged, logical, free_merged, free_logical, n_freed]
-    )
+    stats_ref[...] = pack_slots(WAVEFRONT_STEP_SLOTS, {
+        "rounds": rounds,
+        "merged_writes": merged,
+        "logical_rmws": logical,
+        "free_merged_writes": free_merged,
+        "free_logical_rmws": free_logical,
+        "freed": n_freed,
+    })
 
 
 @functools.partial(
@@ -204,7 +220,7 @@ def wavefront_step_pallas(
         out_shape=[
             jax.ShapeDtypeStruct((cfg.n_state_words,), cfg.state_dtype),
             jax.ShapeDtypeStruct((K,), jnp.int32),
-            jax.ShapeDtypeStruct((6,), jnp.int32),
+            jax.ShapeDtypeStruct((len(WAVEFRONT_STEP_SLOTS),), jnp.int32),
         ],
         in_specs=[
             pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),  # tree state in VMEM
@@ -216,7 +232,7 @@ def wavefront_step_pallas(
         out_specs=[
             pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),
             pl.BlockSpec((K,), lambda: (0,)),
-            pl.BlockSpec((6,), lambda: (0,)),
+            pl.BlockSpec((len(WAVEFRONT_STEP_SLOTS),), lambda: (0,)),
         ],
         grid=(),
         interpret=interpret,
@@ -326,9 +342,15 @@ def _pool_step_kernel(
         jnp.concatenate([tree, slab]) if fp is not None else tree
     )
     nodes_ref[0] = nodes
-    stats_ref[0] = jnp.stack(
-        [rounds, merged, logical, free_merged, free_logical, n_freed, hits]
-    )
+    stats_ref[0] = pack_slots(POOL_STEP_SLOTS, {
+        "rounds": rounds,
+        "merged_writes": merged,
+        "logical_rmws": logical,
+        "free_merged_writes": free_merged,
+        "free_logical_rmws": free_logical,
+        "freed": n_freed,
+        "fastpath_hits": hits,
+    })
 
 
 @functools.partial(
@@ -369,7 +391,7 @@ def pool_wavefront_step_pallas(
         out_shape=[
             jax.ShapeDtypeStruct((S, pcfg.n_state_words), pcfg.tree.state_dtype),
             jax.ShapeDtypeStruct((S, K), jnp.int32),
-            jax.ShapeDtypeStruct((S, 7), jnp.int32),
+            jax.ShapeDtypeStruct((S, len(POOL_STEP_SLOTS)), jnp.int32),
         ],
         in_specs=[
             pl.BlockSpec((1, pcfg.n_state_words), lambda s: (s, 0)),  # own shard tree
@@ -383,7 +405,7 @@ def pool_wavefront_step_pallas(
         out_specs=[
             pl.BlockSpec((1, pcfg.n_state_words), lambda s: (s, 0)),
             pl.BlockSpec((1, K), lambda s: (s, 0)),
-            pl.BlockSpec((1, 7), lambda s: (s, 0)),
+            pl.BlockSpec((1, len(POOL_STEP_SLOTS)), lambda s: (s, 0)),
         ],
         grid=(S,),
         interpret=interpret,
@@ -430,7 +452,7 @@ def wavefront_alloc_pallas(
         out_shape=[
             jax.ShapeDtypeStruct((cfg.n_state_words,), cfg.state_dtype),
             jax.ShapeDtypeStruct((K,), jnp.int32),
-            jax.ShapeDtypeStruct((3,), jnp.int32),
+            jax.ShapeDtypeStruct((len(WAVEFRONT_ALLOC_SLOTS),), jnp.int32),
         ],
         in_specs=[
             pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),  # tree state in VMEM
@@ -440,7 +462,7 @@ def wavefront_alloc_pallas(
         out_specs=[
             pl.BlockSpec((cfg.n_state_words,), lambda: (0,)),
             pl.BlockSpec((K,), lambda: (0,)),
-            pl.BlockSpec((3,), lambda: (0,)),
+            pl.BlockSpec((len(WAVEFRONT_ALLOC_SLOTS),), lambda: (0,)),
         ],
         grid=(),
         interpret=interpret,

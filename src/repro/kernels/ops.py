@@ -38,6 +38,12 @@ from repro.kernels.nbbs_alloc import (
     wavefront_step_pallas,
 )
 from repro.kernels.paged_attention import paged_attention as paged_attention_pallas
+from repro.obs.schema import (
+    POOL_STEP_SLOTS,
+    WAVEFRONT_ALLOC_SLOTS,
+    WAVEFRONT_STEP_SLOTS,
+    unpack_slots,
+)
 
 Array = jax.Array
 
@@ -182,11 +188,8 @@ def nbbs_wavefront_alloc(
         active=active,
         interpret=(impl == "interpret"),
     )
-    return tree, nodes, ok, {
-        "rounds": stats[0],
-        "merged_writes": stats[1],
-        "logical_rmws": stats[2],
-    }
+    # name the positional kernel row through the shared schema order
+    return tree, nodes, ok, unpack_slots(WAVEFRONT_ALLOC_SLOTS, stats)
 
 
 def nbbs_wavefront_step(
@@ -219,15 +222,9 @@ def nbbs_wavefront_step(
         active=active,
         interpret=(impl == "interpret"),
     )
-    return tree, nodes, ok, {
-        "rounds": stats[0],
-        "merged_writes": stats[1],
-        "logical_rmws": stats[2],
-        "free_writes": stats[3],
-        "free_merged_writes": stats[3],
-        "free_logical_rmws": stats[4],
-        "freed": stats[5],
-    }
+    out = unpack_slots(WAVEFRONT_STEP_SLOTS, stats)
+    out["free_writes"] = out["free_merged_writes"]  # legacy alias
+    return tree, nodes, ok, out
 
 
 def nbbs_pool_wavefront_step(
@@ -272,15 +269,9 @@ def nbbs_pool_wavefront_step(
     nodes = jnp.zeros(K, dtype=jnp.int32)
     out_shard = shard
     fa = free_active
-    agg = {
-        "rounds": jnp.int32(0),
-        "merged_writes": jnp.int32(0),
-        "logical_rmws": jnp.int32(0),
-        "free_writes": jnp.int32(0),
-        "free_logical_rmws": jnp.int32(0),
-        "freed": jnp.int32(0),
-        "fastpath_hits": jnp.int32(0),
-    }
+    # aggregation slots come from the same schema tuple the kernel
+    # packs its per-shard stat rows with — neither side can drift
+    agg = {name: jnp.int32(0) for name in POOL_STEP_SLOTS}
     for _ in range(S):
         trees, n_a, ok_a, st = pool_wavefront_step_pallas(
             pcfg,
@@ -299,14 +290,12 @@ def nbbs_pool_wavefront_step(
         out_shard = jnp.where(won, shard, out_shard)
         pending = pending & ~ok_a
         shard = jnp.where(pending, (shard + 1) % S, shard)
-        # shards run concurrently within a launch: rounds is the max row
-        agg["rounds"] = agg["rounds"] + st[:, 0].max()
-        agg["merged_writes"] = agg["merged_writes"] + st[:, 1].sum()
-        agg["logical_rmws"] = agg["logical_rmws"] + st[:, 2].sum()
-        agg["free_writes"] = agg["free_writes"] + st[:, 3].sum()
-        agg["free_logical_rmws"] = agg["free_logical_rmws"] + st[:, 4].sum()
-        agg["freed"] = agg["freed"] + st[:, 5].sum()
-        agg["fastpath_hits"] = agg["fastpath_hits"] + st[:, 6].sum()
+        named = unpack_slots(POOL_STEP_SLOTS, st)  # [S] column per slot
+        for name in POOL_STEP_SLOTS:
+            # shards run concurrently within a launch: rounds is the
+            # max row; every other slot sums across shards
+            red = named[name].max() if name == "rounds" else named[name].sum()
+            agg[name] = agg[name] + red
         fa = jnp.zeros_like(free_active)  # frees apply on the first launch
         # early exit is an eager-mode optimization only: under jit
         # `pending` is a tracer and the loop simply runs all S launches
@@ -315,7 +304,7 @@ def nbbs_pool_wavefront_step(
         ):
             break
     ok = nodes > 0
-    agg["free_merged_writes"] = agg["free_writes"]
+    agg["free_writes"] = agg["free_merged_writes"]  # legacy alias
     agg["overflows"] = (ok & (out_shard != home)).sum(dtype=jnp.int32)
     if pcfg.fastpath is None:
         fast_total = jnp.int32(0)

@@ -1,0 +1,27 @@
+"""Device-resident telemetry plane: named metrics, event ring, export.
+
+The observability subsystem of the stack (docs/observability.md):
+
+  * `obs.schema` — the metric registry (`MetricSpec`) and the
+    positional slot orders every kernel stat row is packed/unpacked
+    with.  Import this from host-only tools; it pulls in no jax.
+  * `obs.metrics` — schema-checked metric dict pytrees with functional
+    accumulation (counters sum, gauges latest-win, fixed-bucket
+    histograms) safe inside jitted loops.
+  * `obs.ring` — the in-graph event ring (masked scatter writes,
+    drop-oldest, host-side drain).
+  * `obs.trace_export` — Chrome-trace/Perfetto rendering of drained
+    snapshots (jax-free; `tools/obsdump.py` is the CLI).
+"""
+
+from repro.obs.schema import (  # noqa: F401
+    ENGINE_METRICS,
+    POOL_STEP_SLOTS,
+    REGISTRY,
+    WAVEFRONT_ALLOC_SLOTS,
+    WAVEFRONT_STEP_SLOTS,
+    MetricSpec,
+    pack_slots,
+    spec,
+    unpack_slots,
+)

@@ -1,0 +1,173 @@
+"""Schema-checked metric pytrees: functional accumulation on device.
+
+A `Metrics` value is a plain `dict[str, jax.Array]` — deliberately not
+a custom class, so it is a first-class jit/pytree citizen (donatable,
+scannable, `jax.tree.map`-able) — whose key set is validated against
+the registry in `obs/schema.py`.  All mutation is functional: `inc`,
+`observe`, `merge` return new dicts, so metrics accumulate inside
+`lax.scan`/`lax.while_loop` carries with zero host syncs; reading them
+(`to_host`) is always the *caller's* sync.
+
+Accumulation semantics come from each metric's registered kind:
+
+  counter / histogram — element-wise sum;
+  gauge               — latest value wins (occupancy levels, not
+                        counts: summing free_pages over steps would be
+                        meaningless).
+
+Histograms are fixed-bucket int32 vectors (`spec.buckets` edges are
+static), so `observe` lowers to a searchsorted + one-hot add — the
+in-graph histogram trick that keeps distribution observability (alloc
+rounds-to-completion, probe distance) inside the compiled step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import schema as _schema
+from repro.obs.schema import REGISTRY, MetricSpec, spec
+
+Array = jax.Array
+Metrics = Dict[str, Array]
+
+
+def validate(names: Iterable[str]) -> None:
+    """Every name must be registered (raises KeyError with guidance)."""
+    for name in names:
+        spec(name)
+
+
+def zeros(
+    names: Iterable[str],
+    vector_lens: Optional[Mapping[str, int]] = None,
+) -> Metrics:
+    """Fresh all-zero metrics for the given schema names.
+
+    Scalars are int32 device scalars; histograms get their bucket-count
+    vector; `vector_lens` sizes vector gauges/counters (e.g.
+    free_pages_shard -> n_shards)."""
+    vector_lens = dict(vector_lens or {})
+    out: Metrics = {}
+    for name in names:
+        s = spec(name)
+        if s.kind == "histogram":
+            out[name] = jnp.zeros((s.n_slots,), jnp.int32)
+        elif name in vector_lens:
+            out[name] = jnp.zeros((vector_lens[name],), jnp.int32)
+        else:
+            out[name] = jnp.int32(0)
+    return out
+
+
+def inc(metrics: Metrics, name: str, value) -> Metrics:
+    """metrics[name] += value (counters) / = value (gauges)."""
+    s = spec(name)
+    out = dict(metrics)
+    if s.kind == "gauge":
+        out[name] = jnp.asarray(value, metrics[name].dtype)
+    else:
+        out[name] = metrics[name] + jnp.asarray(
+            value, metrics[name].dtype
+        )
+    return out
+
+
+def observe(metrics: Metrics, name: str, value, count=1) -> Metrics:
+    """Add `count` observations of scalar `value` into a histogram.
+
+    Bucket i counts observations with value <= buckets[i] (last slot is
+    the overflow bucket) — a one-hot scatter over static edges, safe
+    inside any jitted loop."""
+    s = spec(name)
+    if s.kind != "histogram":
+        raise ValueError(f"{name} is a {s.kind}, not a histogram")
+    edges = jnp.asarray(s.buckets, jnp.int32)
+    idx = jnp.searchsorted(edges, jnp.asarray(value, jnp.int32))
+    out = dict(metrics)
+    out[name] = metrics[name].at[idx].add(jnp.int32(count))
+    return out
+
+
+def observe_many(metrics: Metrics, name: str, values, mask) -> Metrics:
+    """Histogram a vector of observations (masked lanes dropped)."""
+    s = spec(name)
+    if s.kind != "histogram":
+        raise ValueError(f"{name} is a {s.kind}, not a histogram")
+    edges = jnp.asarray(s.buckets, jnp.int32)
+    idx = jnp.searchsorted(edges, jnp.asarray(values, jnp.int32))
+    idx = jnp.where(mask, idx, s.n_slots)  # OOB -> dropped
+    out = dict(metrics)
+    out[name] = metrics[name].at[idx].add(jnp.int32(1), mode="drop")
+    return out
+
+
+def merge(acc: Metrics, new: Metrics) -> Metrics:
+    """Accumulate `new` into `acc` by registered kind (counters and
+    histograms sum; gauges take `new`'s value).  Key sets must match —
+    a drift here is exactly the positional-row bug this module
+    exists to kill, so it raises instead of guessing."""
+    if set(acc) != set(new):
+        raise ValueError(
+            f"metric key drift: {sorted(set(acc) ^ set(new))}"
+        )
+    out: Metrics = {}
+    for name, a in acc.items():
+        if spec(name).kind == "gauge":
+            out[name] = new[name]
+        else:
+            out[name] = a + new[name]
+    return out
+
+
+def reduce_trajectory(traj: Metrics) -> Metrics:
+    """Collapse metrics stacked on a leading [T] axis (a `lax.scan`
+    trajectory) to totals: counters/histograms sum over T, gauges keep
+    the final step's value."""
+    out: Metrics = {}
+    for name, v in traj.items():
+        if spec(name).kind == "gauge":
+            out[name] = v[-1]
+        else:
+            out[name] = v.sum(axis=0, dtype=v.dtype)
+    return out
+
+
+def to_host(metrics: Metrics) -> Dict[str, object]:
+    """One device_get; scalars -> int, vectors/histograms -> list."""
+    vals = jax.device_get(metrics)
+    out: Dict[str, object] = {}
+    for name, v in vals.items():
+        if getattr(v, "ndim", 0) == 0:
+            out[name] = int(v)
+        else:
+            out[name] = [int(x) for x in v]
+    return out
+
+
+def host_counters(values: Mapping[str, int]) -> Dict[str, object]:
+    """Lift host-side int counters into a Metrics-shaped dict (so host
+    and device counters route through the same `merge`)."""
+    validate(values.keys())
+    return {k: jnp.int32(v) for k, v in values.items()}
+
+
+def hist_summary(name: str, counts) -> Dict[str, int]:
+    """Label histogram counts with their '<=edge' / 'inf' buckets."""
+    s = spec(name)
+    labels = [f"<={e}" for e in (s.buckets or ())] + ["inf"]
+    return {lab: int(c) for lab, c in zip(labels, counts)}
+
+
+__all__ = [
+    "Metrics", "MetricSpec", "REGISTRY", "spec", "validate", "zeros",
+    "inc", "observe", "observe_many", "merge", "reduce_trajectory",
+    "to_host", "host_counters", "hist_summary",
+]
+
+# re-export the slot helpers next to the metric ops
+pack_slots = _schema.pack_slots
+unpack_slots = _schema.unpack_slots

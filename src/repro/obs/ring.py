@@ -1,0 +1,142 @@
+"""In-graph event ring: a fixed-capacity device log of allocator events.
+
+Counters say *how much*; the ring says *when and where*.  It is a
+circular int32 buffer living inside the jitted state (e.g. a field of
+the engine's `EngineState`), written by masked scatters from inside
+`lax.scan`/`lax.while_loop` bodies — so per-step allocator events
+(lanes won, overflowed, spilled, frees merged, occupancy after the
+step) are recorded with **zero host synchronization**, and drained
+host-side at chunk boundaries into structured records.
+
+Semantics:
+
+  * fixed capacity `cap` (static; part of the compiled shape).  `cap ==
+    0` disables the ring: every push is a no-op on a [0, W] buffer
+    (`mode="drop"` scatter), so telemetry-off engines pay nothing;
+  * **drop-oldest**: pushes land at `count % cap`, so when producers
+    outrun drains the oldest events are overwritten; `dropped(ring)`
+    reports how many were lost (count - cap, clamped), and the drain
+    returns the surviving window oldest -> newest;
+  * masked pushes: a batch of candidate events with a bool mask writes
+    only the masked-in rows (positions computed by an exclusive cumsum
+    over the mask, exactly one slot per accepted event) — the scatter
+    analogue of "only record rounds where something happened".
+
+Every event is one int32 row of `EVENT_FIELDS`; `decode(rows)` names
+them for export (`obs/trace_export.py` turns a drained window into
+Chrome-trace counter tracks and spans).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# One row per event.  `kind` discriminates; unused fields stay 0.
+EVENT_FIELDS: Tuple[str, ...] = (
+    "step",        # engine/global step index
+    "kind",        # EV_* discriminator
+    "lanes_won",   # allocations committed this event
+    "lanes_overflowed",  # lanes whose allocation failed (pool full)
+    "lanes_spilled",     # fast-octave lanes that took the buddy climb
+    "frees_merged",      # handles released by the merged burst
+    "rounds",      # arbitration rounds the wavefront took
+    "free_pages",  # pool-wide free units after the event
+)
+
+EV_STEP = 1     # one engine decode step (alloc + decode + retire)
+EV_ADMIT = 2    # host-boundary admission burst
+EV_RETIRE = 3   # retirement burst detail
+
+KIND_NAMES = {EV_STEP: "step", EV_ADMIT: "admit", EV_RETIRE: "retire"}
+
+
+class EventRing(NamedTuple):
+    """Device-resident ring state (a pytree; thread it through jit)."""
+
+    buf: Array    # int32[cap, len(EVENT_FIELDS)]
+    count: Array  # int32 scalar: events ever pushed
+
+
+def make_ring(capacity: int) -> EventRing:
+    return EventRing(
+        buf=jnp.zeros((capacity, len(EVENT_FIELDS)), jnp.int32),
+        count=jnp.int32(0),
+    )
+
+
+def capacity(ring: EventRing) -> int:
+    return int(ring.buf.shape[0])
+
+
+def event(kind: int, **fields) -> Array:
+    """Build one int32 event row by field name (unset fields 0)."""
+    unknown = set(fields) - set(EVENT_FIELDS)
+    if unknown:
+        raise KeyError(f"unknown event fields {sorted(unknown)}")
+    vals = [
+        jnp.asarray(fields.get(f, 0), jnp.int32) for f in EVENT_FIELDS
+    ]
+    vals[EVENT_FIELDS.index("kind")] = jnp.int32(kind)
+    return jnp.stack(vals)
+
+
+def push(ring: EventRing, row: Array, mask=True) -> EventRing:
+    """Append one event row when `mask` (device bool) is set.
+
+    The write position is `count % cap`; a masked-out push scatters to
+    an out-of-range row with `mode="drop"`, so the compiled step has no
+    data-dependent control flow."""
+    cap = ring.buf.shape[0]
+    mask = jnp.asarray(mask, bool)
+    if cap == 0:  # telemetry off: keep only the total count
+        return EventRing(ring.buf, ring.count + mask.astype(jnp.int32))
+    pos = jnp.where(mask, ring.count % cap, cap)
+    buf = ring.buf.at[pos].set(row, mode="drop")
+    return EventRing(buf, ring.count + mask.astype(jnp.int32))
+
+
+def push_many(ring: EventRing, rows: Array, mask: Array) -> EventRing:
+    """Append the masked-in rows of a [N, W] candidate batch, in row
+    order, each to its own slot (exclusive-cumsum positions)."""
+    cap = ring.buf.shape[0]
+    mask = jnp.asarray(mask, bool)
+    n = mask.sum(dtype=jnp.int32)
+    if cap == 0:
+        return EventRing(ring.buf, ring.count + n)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1  # 0-based among accepted
+    pos = jnp.where(mask, (ring.count + rank) % cap, cap)
+    buf = ring.buf.at[pos].set(rows, mode="drop")
+    return EventRing(buf, ring.count + n)
+
+
+def dropped(ring: EventRing) -> Array:
+    """Events overwritten before any drain could see them."""
+    cap = ring.buf.shape[0]
+    return jnp.maximum(ring.count - cap, 0)
+
+
+def drain(ring: EventRing) -> List[Dict[str, int]]:
+    """Host-side: the surviving window as dicts, oldest -> newest.
+
+    This is the one deliberate sync of the telemetry plane — call it at
+    chunk boundaries, never inside the hot loop."""
+    cap = ring.buf.shape[0]
+    buf, count = jax.device_get((ring.buf, ring.count))
+    count = int(count)
+    n = min(count, cap)
+    if n == 0:
+        return []
+    start = count % cap if count > cap else 0
+    order = [(start + i) % cap for i in range(n)]
+    return [decode_row(buf[i]) for i in order]
+
+
+def decode_row(row) -> Dict[str, int]:
+    rec = {f: int(v) for f, v in zip(EVENT_FIELDS, row)}
+    rec["kind_name"] = KIND_NAMES.get(rec["kind"], f"kind{rec['kind']}")
+    return rec

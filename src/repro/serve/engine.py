@@ -97,8 +97,8 @@ class ServeEngine:
         self.stats = {"admitted": 0, "queued_full": 0, "rejected": 0,
                       "steps": 0}
         # opt-in per-step observability (the host-loop counterpart of
-        # the jitted engine's EngineStepStats; fragmentation() is an
-        # O(tree) host scan, hence the flag)
+        # the jitted engine's schema-checked metrics dict;
+        # fragmentation() is an O(tree) host scan, hence the flag)
         self.log_stats = log_stats
         self.step_log: List[dict] = []
 

@@ -36,11 +36,16 @@ Design (docs/design.md §8):
     enters with `ctx = S-1, last_tok = prompt[-1]`.  The first engine
     step then computes position S-1 through the paged path — identical
     attention set, and no per-prompt-length recompiles;
-  * `engine_step` returns an `EngineStepStats` struct of device
-    scalars (pages allocated/freed, overflow lanes, probe overflows,
-    free pages + largest allocatable run from the in-graph occupancy
-    scan, RMW counters) that the shim accumulates lazily — reading
-    them is the *caller's* sync, never the step's.
+  * `engine_step` returns a schema-checked metrics dict (obs/schema.py
+    `ENGINE_METRICS`: pages allocated/freed, overflow lanes, probe
+    overflows, free pages + largest allocatable run from the in-graph
+    occupancy scan, RMW counters, rounds/probe-distance histograms)
+    that the shim accumulates lazily through `obs.metrics.merge` —
+    reading them is the *caller's* sync, never the step's.  With
+    `ring_capacity > 0` the state also carries an in-graph event ring
+    (obs/ring.py) recording one event per step; `snapshot()` drains
+    metrics + ring + host-phase spans into the export format
+    `obs/trace_export.py` renders as a Perfetto trace.
 
 Failure semantics mirror the PR 1/3 hardening exactly (regression
 tests in tests/test_serving.py): requests that can never fit the lane
@@ -58,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import Counter
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
@@ -69,11 +75,21 @@ from repro.configs.base import ArchConfig
 from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
 from repro.core.fastpath import FastPathConfig
 from repro.core.nbbs_jax import nb_pool_alloc_pages, nb_pool_free_pages
-from repro.core.pool import PoolConfig, pool_free_units, pool_largest_run
+from repro.core.pool import (
+    PoolConfig,
+    home_shard,
+    pool_free_units,
+    pool_largest_run,
+)
+from repro.obs import metrics as om
+from repro.obs import ring as oring
+from repro.obs.schema import ENGINE_METRICS
+from repro.obs.trace_export import SNAPSHOT_VERSION
 from repro.serve.engine import Request
 from repro.serve.paged_decode import paged_decode_step, serve_prefill
 
 Array = jax.Array
+Metrics = om.Metrics
 
 # Incremented inside the traced step body: tracing happens only at
 # compile time, so tests can assert "N steps, one trace" (the
@@ -103,10 +119,15 @@ class EngineConfig:
     # before the buddy climb on every decode-boundary alloc
     fastpath: bool = False
     fastpath_slab_level: int = 2
+    # in-graph event ring capacity (obs/ring.py); 0 disables the ring
+    # (pushes become no-op scatters, so telemetry-off pays nothing)
+    ring_capacity: int = 0
 
     def __post_init__(self):
         if self.num_pages & (self.num_pages - 1):
             raise ValueError("num_pages must be a power of two")
+        if self.ring_capacity < 0:
+            raise ValueError("ring_capacity must be >= 0")
         if self.n_shards < 1 or (self.n_shards & (self.n_shards - 1)):
             raise ValueError("n_shards must be a power of two >= 1")
         if self.num_pages % self.n_shards:
@@ -161,31 +182,15 @@ class EngineState(NamedTuple):
     overflowed: Array  # bool[B]       retired by in-step alloc failure
     done_step: Array   # int32[B]      step index of retirement, -1 live
     step_no: Array     # int32 scalar  global step counter
+    ring: oring.EventRing  # in-graph event ring (cap 0 = disabled)
 
 
-class EngineStepStats(NamedTuple):
-    """Per-step observability, all int32 device scalars (lazy)."""
-
-    alloc_pages: Array        # pages claimed in-graph this step
-    freed_pages: Array        # pages released by the retirement burst
-    overflow_lanes: Array     # lanes retired because the pool ran out
-    probe_overflows: Array    # allocs served off their home shard
-    retired: Array            # lanes retired this step (any reason)
-    active_lanes: Array       # lanes still decoding after the step
-    alloc_rounds: Array       # pool arbitration rounds
-    merged_writes: Array      # alloc-side merged word writes
-    logical_rmws: Array       # alloc-side paper-metric RMWs
-    free_merged_writes: Array
-    free_logical_rmws: Array
-    free_pages: Array         # pool-wide free pages after the step
-    largest_run: Array        # largest allocatable run (fragmentation)
-    fastpath_hits: Array      # allocs served by the O(1) slab claim
-    fastpath_spills: Array    # fast-octave allocs that took the climb
-
-
-def _zero_stats() -> EngineStepStats:
-    z = jnp.int32(0)
-    return EngineStepStats(*([z] * len(EngineStepStats._fields)))
+def _zero_metrics(ecfg: EngineConfig) -> Metrics:
+    """Fresh all-zero engine metrics (the schema's `ENGINE_METRICS` set;
+    per-shard gauges sized to the pool geometry)."""
+    return om.zeros(
+        ENGINE_METRICS, vector_lens={"free_pages_shard": ecfg.n_shards}
+    )
 
 
 def init_engine_state(ecfg: EngineConfig) -> EngineState:
@@ -213,6 +218,7 @@ def init_engine_state(ecfg: EngineConfig) -> EngineState:
         overflowed=jnp.zeros((B,), bool),
         done_step=jnp.full((B,), -1, jnp.int32),
         step_no=jnp.int32(0),
+        ring=oring.make_ring(ecfg.ring_capacity),
     )
 
 
@@ -234,7 +240,7 @@ def global_tables(ecfg: EngineConfig, page_shard: Array, page_off: Array) -> Arr
 
 def _engine_step_impl(
     ecfg: EngineConfig, params: dict, state: EngineState
-) -> Tuple[EngineState, EngineStepStats]:
+) -> Tuple[EngineState, Metrics]:
     TRACE_COUNTS[ecfg] += 1  # python side effect: fires at trace only
     pcfg = ecfg.pool_config()
     B, MP, MO = ecfg.max_batch, ecfg.max_lane_pages, ecfg.max_out
@@ -242,61 +248,113 @@ def _engine_step_impl(
     bidx = jnp.arange(B)
 
     # -- 1. in-graph page allocation for lanes crossing a page boundary
-    need = state.active & (state.ctx == state.n_pages * pt)
-    need = need & (state.n_pages < MP)  # lane table full = overflow
-    trees, a_shard, a_off, ok, astats = nb_pool_alloc_pages(
-        pcfg, state.trees, need, state.seq_id, ecfg.max_rounds
-    )
-    pos = jnp.clip(state.n_pages, 0, MP - 1)
-    page_shard = state.page_shard.at[bidx, pos].set(
-        jnp.where(ok, a_shard, state.page_shard[bidx, pos])
-    )
-    page_off = state.page_off.at[bidx, pos].set(
-        jnp.where(ok, a_off, state.page_off[bidx, pos])
-    )
-    n_pages = state.n_pages + ok.astype(jnp.int32)
-    overflow_now = (state.active & (state.ctx == state.n_pages * pt)) & ~ok
+    with jax.named_scope("nbbs_alloc"):
+        need = state.active & (state.ctx == state.n_pages * pt)
+        need = need & (state.n_pages < MP)  # lane table full = overflow
+        trees, a_shard, a_off, ok, astats = nb_pool_alloc_pages(
+            pcfg, state.trees, need, state.seq_id, ecfg.max_rounds
+        )
+        pos = jnp.clip(state.n_pages, 0, MP - 1)
+        page_shard = state.page_shard.at[bidx, pos].set(
+            jnp.where(ok, a_shard, state.page_shard[bidx, pos])
+        )
+        page_off = state.page_off.at[bidx, pos].set(
+            jnp.where(ok, a_off, state.page_off[bidx, pos])
+        )
+        n_pages = state.n_pages + ok.astype(jnp.int32)
+        overflow_now = (
+            state.active & (state.ctx == state.n_pages * pt)
+        ) & ~ok
 
     # -- 2. one paged decode for every writable lane ------------------
-    writable = state.active & ~overflow_now
-    tables = global_tables(ecfg, page_shard, page_off)
-    pool = {"k": state.kv_k, "v": state.kv_v}
-    logits, pool = paged_decode_step(
-        ecfg.arch, params, pool, tables, state.ctx, state.last_tok,
-        page_tokens=pt, impl=ecfg.impl, dtype=ecfg.jdtype,
-        active=writable,
-    )
-    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    with jax.named_scope("paged_decode"):
+        writable = state.active & ~overflow_now
+        tables = global_tables(ecfg, page_shard, page_off)
+        pool = {"k": state.kv_k, "v": state.kv_v}
+        logits, pool = paged_decode_step(
+            ecfg.arch, params, pool, tables, state.ctx, state.last_tok,
+            page_tokens=pt, impl=ecfg.impl, dtype=ecfg.jdtype,
+            active=writable,
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    wrote = writable
-    ctx = state.ctx + wrote.astype(jnp.int32)
-    out_pos = jnp.clip(state.n_out, 0, MO - 1)
-    out_toks = state.out_toks.at[bidx, out_pos].set(
-        jnp.where(wrote, nxt, state.out_toks[bidx, out_pos])
-    )
-    n_out = state.n_out + wrote.astype(jnp.int32)
-    last_tok = jnp.where(wrote, nxt, state.last_tok)
+        wrote = writable
+        ctx = state.ctx + wrote.astype(jnp.int32)
+        out_pos = jnp.clip(state.n_out, 0, MO - 1)
+        out_toks = state.out_toks.at[bidx, out_pos].set(
+            jnp.where(wrote, nxt, state.out_toks[bidx, out_pos])
+        )
+        n_out = state.n_out + wrote.astype(jnp.int32)
+        last_tok = jnp.where(wrote, nxt, state.last_tok)
 
-    # -- 3. retirement: budget reached, EOS, or alloc overflow --------
-    finished = wrote & (n_out >= state.max_new)
-    if ecfg.eos is not None:
-        finished = finished | (wrote & (nxt == ecfg.eos))
-    retire = finished | overflow_now
+    # -- 3+4. retirement + burst free of every retired lane's pages ---
+    with jax.named_scope("retire_free"):
+        finished = wrote & (n_out >= state.max_new)
+        if ecfg.eos is not None:
+            finished = finished | (wrote & (nxt == ecfg.eos))
+        retire = finished | overflow_now
 
-    # -- 4. burst free of every retired lane's pages ------------------
-    f_active = (retire[:, None] & (page_shard >= 0)).reshape(-1)
-    trees, freed, fstats = nb_pool_free_pages(
-        pcfg, trees,
-        page_shard.reshape(-1), page_off.reshape(-1), f_active,
-    )
-    page_shard = jnp.where(retire[:, None], -1, page_shard)
-    page_off = jnp.where(retire[:, None], -1, page_off)
-    n_pages = jnp.where(retire, 0, n_pages)
-    active = state.active & ~retire
-    overflowed = state.overflowed | overflow_now
-    done_step = jnp.where(
-        retire & (state.done_step < 0), state.step_no, state.done_step
-    )
+        f_active = (retire[:, None] & (page_shard >= 0)).reshape(-1)
+        trees, freed, fstats = nb_pool_free_pages(
+            pcfg, trees,
+            page_shard.reshape(-1), page_off.reshape(-1), f_active,
+        )
+        page_shard = jnp.where(retire[:, None], -1, page_shard)
+        page_off = jnp.where(retire[:, None], -1, page_off)
+        n_pages = jnp.where(retire, 0, n_pages)
+        active = state.active & ~retire
+        overflowed = state.overflowed | overflow_now
+        done_step = jnp.where(
+            retire & (state.done_step < 0), state.step_no, state.done_step
+        )
+
+    # -- 5. telemetry: named metrics + one ring event per live step ---
+    with jax.named_scope("telemetry"):
+        fp_shard = pool_free_units(pcfg, trees)  # int32[S], one scan
+        free_total = fp_shard.sum(dtype=jnp.int32)
+        won = ok.sum(dtype=jnp.int32)
+        freed_n = freed.sum(dtype=jnp.int32)
+        ring = oring.push(
+            state.ring,
+            oring.event(
+                oring.EV_STEP,
+                step=state.step_no,
+                lanes_won=won,
+                lanes_overflowed=overflow_now.sum(dtype=jnp.int32),
+                lanes_spilled=astats["fastpath_spills"],
+                frees_merged=freed_n,
+                rounds=astats["rounds"],
+                free_pages=free_total,
+            ),
+            mask=state.active.any(),
+        )
+
+        m = _zero_metrics(ecfg)
+        m["alloc_pages"] = won
+        m["freed_pages"] = freed_n
+        m["overflow_lanes"] = overflow_now.sum(dtype=jnp.int32)
+        m["probe_overflows"] = astats["overflows"]
+        m["retired"] = retire.sum(dtype=jnp.int32)
+        m["active_lanes"] = active.sum(dtype=jnp.int32)
+        m["alloc_rounds"] = astats["rounds"]
+        m["merged_writes"] = astats["merged_writes"]
+        m["logical_rmws"] = astats["logical_rmws"]
+        m["free_merged_writes"] = fstats["free_merged_writes"]
+        m["free_logical_rmws"] = fstats["free_logical_rmws"]
+        m["free_pages"] = free_total
+        m["free_pages_shard"] = fp_shard
+        m["largest_run"] = pool_largest_run(pcfg, trees)
+        m["fastpath_hits"] = astats["fastpath_hits"]
+        m["fastpath_spills"] = astats["fastpath_spills"]
+        # ring counters as per-step deltas (merge sums them back up)
+        m["ring_events"] = ring.count - state.ring.count
+        m["ring_dropped"] = oring.dropped(ring) - oring.dropped(state.ring)
+        # rounds-to-completion of this step's page-boundary wavefront
+        m = om.observe(m, "alloc_rounds_hist", astats["rounds"])
+        # probe distance of each won allocation (0 = home shard)
+        home = home_shard(pcfg, state.seq_id)
+        dist = (a_shard - home) % pcfg.n_shards
+        m = om.observe_many(m, "probe_distance_hist", dist, ok)
 
     new_state = EngineState(
         trees=trees, kv_k=pool["k"], kv_v=pool["v"],
@@ -305,25 +363,9 @@ def _engine_step_impl(
         last_tok=last_tok, out_toks=out_toks, n_out=n_out,
         max_new=state.max_new, active=active, overflowed=overflowed,
         done_step=done_step, step_no=state.step_no + 1,
+        ring=ring,
     )
-    stats = EngineStepStats(
-        alloc_pages=ok.sum(dtype=jnp.int32),
-        freed_pages=freed.sum(dtype=jnp.int32),
-        overflow_lanes=overflow_now.sum(dtype=jnp.int32),
-        probe_overflows=astats["overflows"],
-        retired=retire.sum(dtype=jnp.int32),
-        active_lanes=active.sum(dtype=jnp.int32),
-        alloc_rounds=astats["rounds"],
-        merged_writes=astats["merged_writes"],
-        logical_rmws=astats["logical_rmws"],
-        free_merged_writes=fstats["free_merged_writes"],
-        free_logical_rmws=fstats["free_logical_rmws"],
-        free_pages=pool_free_units(pcfg, trees).sum(dtype=jnp.int32),
-        largest_run=pool_largest_run(pcfg, trees),
-        fastpath_hits=astats["fastpath_hits"],
-        fastpath_spills=astats["fastpath_spills"],
-    )
-    return new_state, stats
+    return new_state, m
 
 
 # the EngineState argument is donated everywhere below: the KV pool is
@@ -332,7 +374,7 @@ def _engine_step_impl(
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
 def engine_step(
     ecfg: EngineConfig, params: dict, state: EngineState
-) -> Tuple[EngineState, EngineStepStats]:
+) -> Tuple[EngineState, Metrics]:
     """One fully-fused decode iteration (alloc + decode + free)."""
     return _engine_step_impl(ecfg, params, state)
 
@@ -340,10 +382,10 @@ def engine_step(
 @functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(2,))
 def engine_run(
     ecfg: EngineConfig, params: dict, state: EngineState, num_steps: int
-) -> Tuple[EngineState, EngineStepStats]:
+) -> Tuple[EngineState, Metrics]:
     """`num_steps` fused decode iterations under one `lax.scan` — a
     whole chunk of tokens per dispatch, still zero host syncs.  Returns
-    (state, stats with a leading [num_steps] axis)."""
+    (state, metrics with a leading [num_steps] axis)."""
     def body(st, _):
         return _engine_step_impl(ecfg, params, st)
 
@@ -456,28 +498,11 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
 
 
-@jax.jit
-def _reduce_traj(traj: EngineStepStats) -> EngineStepStats:
-    """Collapse a [num_steps]-stacked stats trajectory to chunk totals
-    (counters sum; occupancy gauges keep the final step's value).
-    Jitted so chunked accumulation stays transfer-free."""
-    s = jax.tree.map(lambda x: x.sum(dtype=jnp.int32), traj)
-    return s._replace(
-        active_lanes=traj.active_lanes[-1],
-        free_pages=traj.free_pages[-1],
-        largest_run=traj.largest_run[-1],
-    )
-
-
-@jax.jit
-def _acc_stats(acc: EngineStepStats, stat: EngineStepStats) -> EngineStepStats:
-    """acc + stat with gauge fields overwritten instead of summed."""
-    out = jax.tree.map(jnp.add, acc, stat)
-    return out._replace(
-        active_lanes=stat.active_lanes,
-        free_pages=stat.free_pages,
-        largest_run=stat.largest_run,
-    )
+# jitted so chunked accumulation stays transfer-free; the kind-aware
+# semantics (counters/histograms sum, gauges keep the latest value)
+# live in obs/metrics.py, keyed off the schema — no hand-listed fields
+_reduce_traj = jax.jit(om.reduce_trajectory)
+_acc_stats = jax.jit(om.merge)
 
 
 # ---------------------------------------------------------------------------
@@ -513,6 +538,7 @@ class JitServeEngine:
         max_rounds: int = 64,
         fastpath: bool = False,
         fastpath_slab_level: int = 2,
+        ring_capacity: int = 0,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
             "paged engine covers attention families (docs/design.md §5)"
@@ -534,6 +560,7 @@ class JitServeEngine:
             max_rounds=max_rounds,
             fastpath=fastpath,
             fastpath_slab_level=fastpath_slab_level,
+            ring_capacity=ring_capacity,
         )
         self.cfg = cfg
         self.params = params
@@ -550,10 +577,25 @@ class JitServeEngine:
             "admitted": 0, "queued_full": 0, "rejected": 0,
             "steps": 0, "overflow_retired": 0,
             # admission-path slab counters (decode-path ones live in
-            # the device-side EngineStepStats; stat_totals sums both)
+            # the device-side metric accumulator; `stat_totals` folds
+            # both through one schema-aware merge)
             "admit_fastpath_hits": 0, "admit_fastpath_spills": 0,
         }
-        self.acc = _zero_stats()  # running device-side stat totals
+        self.acc = _zero_metrics(self.ecfg)  # device-side totals
+        # host-phase span log for the trace exporter: wall-clock
+        # windows of admissions, fused decode chunks and drains,
+        # relative to engine construction
+        self.spans: List[Dict] = []
+        self._t_origin = time.perf_counter()
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t_origin
+
+    def _record_span(self, phase: str, t0: float, step0: int, **extra):
+        self.spans.append({
+            "phase": phase, "t0": t0, "t1": self._now(),
+            "step0": step0, "step1": self.stats["steps"], **extra,
+        })
 
     # -- admission ----------------------------------------------------
     def _pages_for(self, n_tokens: int) -> int:
@@ -577,6 +619,8 @@ class JitServeEngine:
         return [int(i) for i in np.nonzero(seq < 0)[0]]
 
     def _admit(self) -> None:
+        t0, step0 = self._now(), self.stats["steps"]
+        admitted0 = self.stats["admitted"]
         free = self._free_lanes()
         while self.waiting and free:
             req = self.waiting[0]
@@ -601,6 +645,9 @@ class JitServeEngine:
             self.state = self.state._replace(trees=trees)
             self._insert(free.pop(0), req, shards, offs, need)
             self.stats["admitted"] += 1
+        n_adm = self.stats["admitted"] - admitted0
+        if n_adm:
+            self._record_span("admit", t0, step0, admitted=n_adm)
 
     def _insert(self, lane: int, req: Request, shards, offs, n_pages) -> None:
         S = len(req.prompt)
@@ -633,22 +680,26 @@ class JitServeEngine:
     def decode_steps(self, n: int, *, fused: bool = False) -> None:
         """Run n compiled decode iterations with no host sync.  With
         `fused=True` the whole chunk is one `lax.scan` dispatch."""
-        if fused:
-            self.state, traj = engine_run(
-                self.ecfg, self.params, self.state, n
-            )
-            self.acc = _acc_stats(self.acc, _reduce_traj(traj))
-        else:
-            for _ in range(n):
-                self.state, stat = engine_step(
-                    self.ecfg, self.params, self.state
+        t0, step0 = self._now(), self.stats["steps"]
+        with jax.profiler.TraceAnnotation("engine.decode_steps"):
+            if fused:
+                self.state, traj = engine_run(
+                    self.ecfg, self.params, self.state, n
                 )
-                self.acc = _acc_stats(self.acc, stat)
+                self.acc = _acc_stats(self.acc, _reduce_traj(traj))
+            else:
+                for _ in range(n):
+                    self.state, stat = engine_step(
+                        self.ecfg, self.params, self.state
+                    )
+                    self.acc = _acc_stats(self.acc, stat)
         self.stats["steps"] += n
+        self._record_span("decode", t0, step0, n=n, fused=int(fused))
 
     def _drain(self) -> List[int]:
         """Collect retired lanes (one host sync), clear them, and
         return the drained seq ids in retirement-step order."""
+        t0, step0 = self._now(), self.stats["steps"]
         seq, act, n_out, out_toks, over, done = jax.device_get((
             self.state.seq_id, self.state.active, self.state.n_out,
             self.state.out_toks, self.state.overflowed,
@@ -676,6 +727,7 @@ class JitServeEngine:
             self.state = clear_lanes(
                 self.ecfg, self.state, jnp.asarray(mask)
             )
+            self._record_span("drain", t0, step0, drained=len(drained))
         return drained
 
     # -- ServeEngine-compatible surface --------------------------------
@@ -706,16 +758,55 @@ class JitServeEngine:
             steps += n
 
     # -- observability -------------------------------------------------
-    def stat_totals(self) -> Dict[str, int]:
-        """Sync and return the accumulated EngineStepStats counters.
-        The fastpath counters cover both allocation paths: decode-step
-        growth (device accumulator) plus admission claims (host
-        counters), so they compare directly against `PageOracle`'s."""
-        vals = jax.device_get(self.acc)
-        out = {f: int(v) for f, v in zip(EngineStepStats._fields, vals)}
-        out["fastpath_hits"] += self.stats["admit_fastpath_hits"]
-        out["fastpath_spills"] += self.stats["admit_fastpath_spills"]
-        return out
+    def stat_totals(self) -> Dict[str, object]:
+        """Sync and return all accumulated metrics: device accumulator
+        and host scheduler counters folded through ONE schema-aware
+        `obs.metrics.merge` (no hand-rolled `+=` per field).  The
+        admission-path slab claims contribute to `fastpath_hits`/
+        `fastpath_spills` as well as their `admit_*` breakouts, so the
+        combined totals compare directly against `PageOracle`'s."""
+        host = om.host_counters({
+            "steps": self.stats["steps"],
+            "admitted": self.stats["admitted"],
+            "queued_full": self.stats["queued_full"],
+            "rejected": self.stats["rejected"],
+            "overflow_retired": self.stats["overflow_retired"],
+            "admit_fastpath_hits": self.stats["admit_fastpath_hits"],
+            "admit_fastpath_spills": self.stats["admit_fastpath_spills"],
+            "fastpath_hits": self.stats["admit_fastpath_hits"],
+            "fastpath_spills": self.stats["admit_fastpath_spills"],
+        })
+        # pad both sides to the union key set (merge refuses drift);
+        # device values ride the "new" side so gauges keep theirs
+        acc = dict(self.acc)
+        for k in host:
+            acc.setdefault(k, jnp.int32(0))
+        base = {k: host.get(k, jnp.zeros_like(v)) for k, v in acc.items()}
+        return om.to_host(om.merge(base, acc))
+
+    def snapshot(self) -> Dict[str, object]:
+        """Drain the whole telemetry plane into the exporter's snapshot
+        format (obs/trace_export.py): schema-checked metric totals, the
+        event ring's surviving window, and the host-phase span log.
+        This is a deliberate host sync — call it at run boundaries."""
+        ecfg = self.ecfg
+        return {
+            "obs_schema": SNAPSHOT_VERSION,
+            "source": "jit_engine",
+            "config": {
+                "num_pages": ecfg.num_pages,
+                "page_tokens": ecfg.page_tokens,
+                "max_batch": ecfg.max_batch,
+                "max_lane_pages": ecfg.max_lane_pages,
+                "n_shards": ecfg.n_shards,
+                "layout": ecfg.layout,
+                "fastpath": ecfg.fastpath,
+                "ring_capacity": ecfg.ring_capacity,
+            },
+            "metrics": self.stat_totals(),
+            "events": oring.drain(self.state.ring),
+            "spans": list(self.spans),
+        }
 
     def device_free_pages(self) -> int:
         return int(

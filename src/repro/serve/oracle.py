@@ -255,6 +255,22 @@ class HostOracleEngine:
             steps += n
 
     # -- observability (same numbering as the device tables) ----------
+    def stat_totals(self) -> Dict[str, int]:
+        """Metric totals under the same schema names the jitted
+        engine's `stat_totals` reports (keys validated against
+        obs/schema.py), so differential tests compare the two sides
+        key-for-key.  The slab counters are the pool's combined
+        admission+decode accounting — exactly what the engine's single
+        merge of host admit counters and device accumulator yields."""
+        from repro.obs.schema import spec
+
+        out = dict(self.stats)
+        out["fastpath_hits"] = self.pool.fastpath_hits
+        out["fastpath_spills"] = self.pool.fastpath_spills
+        for name in out:
+            spec(name)  # raises on unregistered metric names
+        return out
+
     def block_table(self, seq_id: int) -> np.ndarray:
         lane = self.lanes[self._lane_of[seq_id]]
         out = np.full((self.max_lane_pages,), -1, np.int32)

@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Benchmark-artifact schema checker (CI: the bench-smoke job).
+
+Every committed BENCH_*.json must carry the standardized envelope
+emitted by `benchmarks/common.py::bench_envelope`:
+
+  {
+    "schema_version": 1,
+    "benchmark": "<name>",
+    "config": {...workload geometry...},
+    "records": [
+      {"dims":    {axis: value, ...},      # what varies across records
+       "metrics": {name: number | [..]}},  # names from repro.obs.schema
+    ],
+    ...extra top-level keys allowed (free-form summaries)
+  }
+
+The point is the `metrics` mapping: its keys must all be registered in
+the single metric catalogue (`src/repro/obs/schema.py`), so a benchmark
+cannot invent an ad-hoc counter name that drifts from the kernels' and
+the engine's.  Values must be numbers (or lists of numbers, for
+histogram/vector metrics).
+
+Usage:
+  python tools/check_bench_schema.py [FILE.json ...]
+With no arguments, checks every BENCH_*.json in the repo root.
+
+Exit code 0 = all files validate; 1 = at least one violation (listed).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs.schema import spec  # noqa: E402  (path set up above)
+from repro.obs.trace_export import validate_snapshot  # noqa: E402
+
+SCHEMA_VERSION = 1
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_record(rec, where: str):
+    errors = []
+    if not isinstance(rec, dict):
+        return [f"{where}: record is not an object"]
+    for key in ("dims", "metrics"):
+        if key not in rec or not isinstance(rec[key], dict):
+            errors.append(f"{where}: missing/invalid {key!r} mapping")
+    for name, val in rec.get("metrics", {}).items():
+        try:
+            spec(name)
+        except KeyError as e:
+            errors.append(f"{where}: {e.args[0]}")
+            continue
+        if not (
+            _is_num(val)
+            or (isinstance(val, list) and all(_is_num(x) for x in val))
+        ):
+            errors.append(
+                f"{where}: metric {name!r} value must be a number or "
+                f"list of numbers, got {type(val).__name__}"
+            )
+    for axis, val in rec.get("dims", {}).items():
+        if not isinstance(val, (str, int, float, bool)):
+            errors.append(
+                f"{where}: dim {axis!r} must be a scalar, got "
+                f"{type(val).__name__}"
+            )
+    return errors
+
+
+def check_file(path: str):
+    errors = []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable JSON ({e})"]
+    if not isinstance(data, dict):
+        return [
+            f"{path}: top level must be the envelope object, not "
+            f"{type(data).__name__} (regenerate with bench_envelope)"
+        ]
+    if "obs_schema" in data:
+        # engine telemetry snapshot (JitServeEngine.snapshot), not a
+        # bench envelope — validate it as the trace exporter's input
+        try:
+            validate_snapshot(data)
+        except (KeyError, ValueError, TypeError) as e:
+            errors.append(f"{path}: invalid snapshot ({e})")
+        return errors
+    if data.get("schema_version") != SCHEMA_VERSION:
+        errors.append(
+            f"{path}: schema_version {data.get('schema_version')!r} "
+            f"!= {SCHEMA_VERSION}"
+        )
+    if not isinstance(data.get("benchmark"), str) or not data.get(
+        "benchmark"
+    ):
+        errors.append(f"{path}: missing 'benchmark' name")
+    if not isinstance(data.get("config"), dict):
+        errors.append(f"{path}: missing 'config' object")
+    records = data.get("records")
+    if not isinstance(records, list) or not records:
+        errors.append(f"{path}: 'records' must be a non-empty list")
+        records = []
+    for i, rec in enumerate(records):
+        errors.extend(check_record(rec, f"{path}[records/{i}]"))
+    return errors
+
+
+def main(argv) -> int:
+    paths = argv or sorted(glob.glob(os.path.join(REPO, "BENCH_*.json")))
+    if not paths:
+        print("no BENCH_*.json artifacts found")
+        return 1
+    failed = 0
+    for path in paths:
+        errors = check_file(path)
+        rel = os.path.relpath(path, REPO)
+        if errors:
+            failed += 1
+            print(f"FAIL {rel}")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            with open(path) as f:
+                data = json.load(f)
+            if "obs_schema" in data:
+                print(f"ok   {rel} (snapshot, "
+                      f"{len(data.get('events', []))} events)")
+            else:
+                print(f"ok   {rel} ({len(data['records'])} records)")
+    if failed:
+        print(f"\n{failed} artifact(s) violate the bench schema")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Telemetry snapshot dumper: metrics tables, event logs, Perfetto traces.
+
+Input is a *snapshot* JSON file — the host-side dump of the device
+telemetry plane produced by `JitServeEngine.snapshot()` (benchmarks
+write one next to their BENCH_*.json; see docs/observability.md for
+the capture workflow).  This tool renders it three ways:
+
+  python tools/obsdump.py SNAP.json                  # metric table
+  python tools/obsdump.py SNAP.json --events         # ring event log
+  python tools/obsdump.py SNAP.json --trace out.json # Perfetto trace
+
+The emitted trace is Chrome JSON — load it at https://ui.perfetto.dev
+or chrome://tracing to scrub the admission -> alloc -> decode -> retire
+timeline with free-page/occupancy counter tracks.
+
+`--self-test` synthesizes a small snapshot, exports it, and validates
+the result (structure, metric names, span/timestamp invariants) — the
+CI docs job runs it so the exporter can never rot silently.
+
+Deliberately imports only the jax-free obs modules (schema +
+trace_export): it must run on a host with no accelerator stack.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs.schema import spec  # noqa: E402
+from repro.obs.trace_export import (  # noqa: E402
+    SNAPSHOT_VERSION,
+    chrome_trace,
+    save_trace,
+    validate_snapshot,
+    validate_trace,
+)
+
+
+def dump_metrics(snap) -> None:
+    print(f"source: {snap['source']}   config: {snap.get('config', {})}")
+    print(f"{'metric':<28} {'kind':<10} {'unit':<8} value")
+    for name in sorted(snap["metrics"]):
+        s = spec(name)
+        val = snap["metrics"][name]
+        if isinstance(val, list) and s.kind == "histogram":
+            edges = list(s.buckets or ())
+            labels = [f"<={e}" for e in edges] + ["inf"]
+            val = " ".join(
+                f"{lab}:{c}" for lab, c in zip(labels, val) if c
+            ) or "(empty)"
+        print(f"{name:<28} {s.kind:<10} {s.unit:<8} {val}")
+
+
+def dump_events(snap) -> None:
+    events = snap["events"]
+    print(f"{len(events)} ring events "
+          f"(dropped: {snap['metrics'].get('ring_dropped', 0)})")
+    for ev in events:
+        detail = " ".join(
+            f"{k}={v}" for k, v in ev.items()
+            if k not in ("step", "kind", "kind_name") and v
+        )
+        print(f"  step {ev['step']:>6}  {ev['kind_name']:<7} {detail}")
+
+
+def self_test() -> int:
+    """Synthesize a snapshot -> export -> validate (the CI gate)."""
+    snap = {
+        "obs_schema": SNAPSHOT_VERSION,
+        "source": "obsdump --self-test",
+        "config": {"n_shards": 2, "num_pages": 64},
+        "metrics": {
+            "steps": 8, "alloc_pages": 6, "freed_pages": 6,
+            "free_pages": 64, "active_lanes": 0,
+            "merged_writes": 40, "logical_rmws": 66,
+            "ring_events": 8, "ring_dropped": 0,
+            "alloc_rounds_hist": [2, 4, 2, 0, 0, 0, 0, 0],
+        },
+        "events": [
+            {"step": i, "kind": 1, "kind_name": "step",
+             "lanes_won": i % 2, "lanes_overflowed": 0,
+             "lanes_spilled": 0, "frees_merged": 1, "rounds": 1,
+             "free_pages": 64 - i}
+            for i in range(8)
+        ],
+        "spans": [
+            {"phase": "admit", "t0": 0.0, "t1": 0.01,
+             "step0": 0, "step1": 0, "admitted": 2},
+            {"phase": "decode", "t0": 0.01, "t1": 0.09,
+             "step0": 0, "step1": 8, "n": 8, "fused": 1},
+            {"phase": "drain", "t0": 0.09, "t1": 0.10,
+             "step0": 8, "step1": 8, "drained": 2},
+        ],
+    }
+    validate_snapshot(snap)
+    trace = chrome_trace(snap)
+    validate_trace(trace)
+    n_steps = sum(
+        1 for e in trace["traceEvents"]
+        if e["ph"] == "X" and e["name"].startswith("step ")
+    )
+    assert n_steps == 8, f"expected 8 step spans, got {n_steps}"
+    counters = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    assert counters, "expected counter tracks"
+    print(f"self-test ok: {len(trace['traceEvents'])} trace events, "
+          f"{n_steps} step spans, {len(counters)} counter samples")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", nargs="?", help="snapshot JSON file")
+    ap.add_argument("--events", action="store_true",
+                    help="print the drained ring event log")
+    ap.add_argument("--trace", metavar="OUT",
+                    help="write a Perfetto-loadable Chrome trace")
+    ap.add_argument("--self-test", action="store_true",
+                    help="synthesize+export+validate (CI gate)")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+    if not args.snapshot:
+        ap.error("a snapshot file is required (or --self-test)")
+    with open(args.snapshot) as f:
+        snap = json.load(f)
+    validate_snapshot(snap)
+    if args.trace:
+        path = save_trace(snap, args.trace)
+        n = len(chrome_trace(snap)["traceEvents"])
+        print(f"wrote {path} ({n} events) — load at ui.perfetto.dev")
+        return 0
+    if args.events:
+        dump_events(snap)
+        return 0
+    dump_metrics(snap)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
