@@ -166,6 +166,7 @@ def run() -> None:
         )
 
     fastpath_sweep()
+    magazine_sweep()
 
 
 def fastpath_sweep() -> None:
@@ -255,6 +256,121 @@ def fastpath_sweep() -> None:
             bench_envelope(
                 "bench_constant_occupancy/fastpath_sweep",
                 {"depth": DEPTH, "churn_steps": CHURN},
+                records,
+            ),
+        )
+
+
+def magazine_sweep() -> None:
+    """Leaf-octave constant-occupancy churn vs magazine capacity.
+
+    W lanes free and re-allocate one leaf page each per mixed pool
+    step, four lanes sharing each magazine — so mag_cap=2 absorbs only
+    half of every burst while mag_cap>=4 recycles all of it.  The
+    sweep's claim: at mag_cap>=4, shared-state logical RMWs per op
+    (alloc climbs + release climbs over all alloc+free ops) fall below
+    0.25 — steady-state churn never touches the trees.  mag_cap=0 is
+    the magazines-off buddy/slab baseline in the same JSON."""
+    from repro.core.magazine import MagazineConfig
+    from repro.core.pool import pool_init_magazines, pool_wavefront_step_mag
+
+    DEPTH = 6 if FAST else 8
+    CHURN = 3 if FAST else 16
+    S, W = 1, 16
+    LANES_PER_MAG = 4
+    L = W // LANES_PER_MAG
+    records = []
+    per_cap = {}
+    for mag_cap in (0, 2, 4, 8):
+        mcfg = (
+            MagazineConfig(mag_cap=mag_cap) if mag_cap else None
+        )
+        pcfg = PoolConfig(TreeConfig(depth=DEPTH), S, magazines=mcfg)
+        levels = jnp.full(W, DEPTH, jnp.int32)
+        active = jnp.ones(W, bool)
+        zeros = jnp.zeros(W, jnp.int32)
+        mag_lane = jnp.asarray(
+            [i % L for i in range(W)], jnp.int32
+        )
+        trees = pcfg.empty_trees()
+        tot = {"logical": 0, "free_logical": 0, "hits": 0, "spills": 0}
+        if mag_cap:
+            mags = pool_init_magazines(pcfg, L)
+            trees, mags, nodes, shard, ok, _ = pool_wavefront_step_mag(
+                pcfg, trees, mags, zeros, zeros, jnp.zeros(W, bool),
+                levels, active,
+            )
+            assert bool(ok.all())
+            jax.block_until_ready(trees)
+            t0 = time.perf_counter()
+            for _ in range(CHURN):
+                trees, mags, nodes, shard, ok, stats = (
+                    pool_wavefront_step_mag(
+                        pcfg, trees, mags, nodes, shard, ok, levels,
+                        active, 64, None, mag_lane, mag_lane,
+                    )
+                )
+                tot["logical"] += int(stats["logical_rmws"])
+                tot["free_logical"] += int(stats["free_logical_rmws"])
+                tot["hits"] += int(stats["magazine_hits"])
+                tot["spills"] += int(stats["magazine_spills"])
+        else:
+            trees, nodes, shard, ok, _ = pool_wavefront_step(
+                pcfg, trees, zeros, zeros, jnp.zeros(W, bool), levels,
+                active,
+            )
+            assert bool(ok.all())
+            jax.block_until_ready(trees)
+            t0 = time.perf_counter()
+            for _ in range(CHURN):
+                trees, nodes, shard, ok, stats = pool_wavefront_step(
+                    pcfg, trees, nodes, shard, ok, levels, active,
+                )
+                tot["logical"] += int(stats["logical_rmws"])
+                tot["free_logical"] += int(stats["free_logical_rmws"])
+        jax.block_until_ready(trees)
+        dt = time.perf_counter() - t0
+        assert bool(ok.all())
+        ops = 2 * CHURN * W  # one free + one alloc per lane per step
+        rmws_per_op = (tot["logical"] + tot["free_logical"]) / ops
+        rec = bench_record(
+            dims={"mag_cap": mag_cap, "n_shards": S, "depth": DEPTH,
+                  "width": W, "lanes_per_mag": LANES_PER_MAG,
+                  "churn_steps": CHURN},
+            metrics={
+                "logical_rmws": tot["logical"],
+                "free_logical_rmws": tot["free_logical"],
+                "magazine_hits": tot["hits"],
+                "magazine_spills": tot["spills"],
+                "rmws_per_op": rmws_per_op,
+                "seconds": dt,
+            },
+        )
+        per_cap[mag_cap] = rec["metrics"]
+        records.append(rec)
+        row(
+            "constant_occupancy_magazine", f"pool-mag{mag_cap}", W, ops,
+            dt,
+            extra=(
+                f"rmws/op={rmws_per_op:.3f};hits={tot['hits']};"
+                f"spills={tot['spills']}"
+            ),
+        )
+    # the tentpole claim: a deep-enough magazine absorbs the whole
+    # churn burst — shared-state RMWs per op collapse vs the baseline
+    for cap in (4, 8):
+        assert per_cap[cap]["rmws_per_op"] < 0.25, per_cap
+        assert per_cap[cap]["magazine_hits"] > 0
+    assert (
+        per_cap[4]["rmws_per_op"] < per_cap[0]["rmws_per_op"]
+    ), per_cap
+    if not FAST:
+        dump_bench_json(
+            "BENCH_MAGAZINE.json",
+            bench_envelope(
+                "bench_constant_occupancy/magazine_sweep",
+                {"depth": DEPTH, "churn_steps": CHURN, "width": W,
+                 "lanes_per_mag": LANES_PER_MAG},
                 records,
             ),
         )

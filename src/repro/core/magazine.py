@@ -1,0 +1,252 @@
+"""Per-lane magazines: a zero-RMW recycling cache over the pool.
+
+scalloc (arXiv 1503.09006) and SpeedMalloc (arXiv 2508.20253) both make
+the same observation about multicore allocators: the big wins come from
+a cheap local front end that absorbs alloc/free churn before it reaches
+the shared structure.  The source paper positions NBBS as exactly the
+kind of core allocator such layered services sit on top of.  This
+module is that layer for the wavefront pool (docs/design.md §10): a
+small fixed-capacity LIFO *magazine* of recently freed page handles per
+requester lane (a decode lane / sequence group), so constant-occupancy
+churn of the fast octave recycles pages lane-locally with **zero**
+shared-state RMWs — no slab bit, no tree climb.
+
+Representation (static shapes, jit/vmap/donation friendly):
+
+  * `MagazineState.pages`: `int32[n_lanes, mag_cap]`, global leaf page
+    ids (`shard * 2^depth + offset`), `-1` in empty slots;
+  * `MagazineState.depth`: `int32[n_lanes]`, live entries per lane;
+    slots `0..depth-1` are full, in push order (slot `depth-1` is the
+    LIFO top).
+
+Protocol (all burst ops, mirroring the pool's merged-round style):
+
+  * `mag_claim`: each wanting lane pops from its own magazine.  Lanes
+    sharing a magazine are ranked in lane order (the same stable order
+    `alloc_round`'s rank assignment uses) and rank r pops slot
+    `depth-1-r`, so concurrent claimants of one magazine take distinct
+    slots top-down with no arbitration.  Misses simply stay pending —
+    the caller's round falls through to the slab/tree wavefront.
+  * `mag_stash`: each candidate lane pushes into its own magazine; rank
+    r lands in slot `depth+r` and ranks beyond capacity *drop through*
+    (stashed=False) to the caller's ordinary merged release.
+
+A magazine only ever holds handles the pool still marks allocated —
+stashing happens *instead of* releasing, never after — so a magazine
+pop hands out a page the tree/slab side structurally cannot: the
+single-tree safety argument (S1) is untouched, exactly like the
+fastpath carve.  Capacity is conserved as
+`pool_free_units + mag_total + live == total_units`
+(tests/test_properties.py).
+
+The ops here are pool-agnostic integer machinery; the fusion into pool
+rounds (claim-then-wavefront, stash-then-release, exhaustion
+spill-back, batched refill) lives in `core/pool.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class MagazineConfig:
+    """Static magazine geometry.
+
+    `mag_cap` is the per-lane LIFO capacity (pages).  `refill_batch`,
+    when nonzero, is how many pages one `pool_magazine_refill` burst
+    pre-claims per selected lane — routed through ONE pool wavefront
+    for the whole batch, never per page."""
+
+    mag_cap: int = 4
+    refill_batch: int = 0
+
+    def validate(self) -> None:
+        if self.mag_cap < 1:
+            raise ValueError(
+                f"magazine mag_cap must be >= 1, got {self.mag_cap}"
+            )
+        if self.refill_batch < 0:
+            raise ValueError(
+                f"magazine refill_batch must be >= 0, got "
+                f"{self.refill_batch}"
+            )
+
+
+class MagazineState(NamedTuple):
+    """Per-lane magazine contents (a leaf of the pool state pytree)."""
+
+    pages: Array  # int32[n_lanes, mag_cap]; global page ids, -1 empty
+    depth: Array  # int32[n_lanes]; slots 0..depth-1 are live
+
+
+def init_magazines(mcfg: MagazineConfig, n_lanes: int) -> MagazineState:
+    """All-empty magazines for `n_lanes` requester lanes."""
+    mcfg.validate()
+    return MagazineState(
+        pages=jnp.full((n_lanes, mcfg.mag_cap), -1, jnp.int32),
+        depth=jnp.zeros((n_lanes,), jnp.int32),
+    )
+
+
+def mag_total(mags: MagazineState) -> Array:
+    """int32 scalar: pages currently stashed across all magazines."""
+    return mags.depth.sum(dtype=jnp.int32)
+
+
+def mag_contents(mags: MagazineState) -> Tuple[Array, Array]:
+    """Flattened view for batched spill-back: (pages int32[L*C],
+    live bool[L*C]) — live marks slots below each lane's depth."""
+    L, C = mags.pages.shape
+    live = jnp.arange(C, dtype=jnp.int32)[None, :] < mags.depth[:, None]
+    return mags.pages.reshape(-1), live.reshape(-1)
+
+
+def mag_clear(mags: MagazineState, enable: Array) -> MagazineState:
+    """Empty every magazine when `enable` (bool scalar) is set."""
+    return MagazineState(
+        pages=jnp.where(enable, jnp.int32(-1), mags.pages),
+        depth=jnp.where(enable, jnp.int32(0), mags.depth),
+    )
+
+
+def mag_free_per_shard(
+    mags: MagazineState, n_shards: int, pages_per_shard: int
+) -> Array:
+    """int32[S]: stashed pages per owning shard (a stashed page stays
+    marked allocated in its shard's tree, so occupancy gauges add this
+    to `pool_free_units` to see through the magazines)."""
+    pages, live = mag_contents(mags)
+    sh = jnp.clip(
+        jnp.maximum(pages, 0) // pages_per_shard, 0, n_shards - 1
+    )
+    return jnp.zeros(n_shards, jnp.int32).at[sh].add(
+        live.astype(jnp.int32)
+    )
+
+
+def group_rank(keys: Array, cand: Array, n_groups: int) -> Array:
+    """Rank of each candidate among candidates sharing its key, in
+    index (lane) order — 0 for non-candidates.
+
+    The grouped analogue of `slab_claim`'s cumsum rank: a stable sort
+    over `O(K log K)` instead of a `K x n_groups` one-hot matrix, so
+    it stays cheap on the engine's `B * max_lane_pages`-wide free
+    bursts."""
+    K = keys.shape[0]
+    key = jnp.where(cand, keys, n_groups).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    skey = key[order]
+    first = jnp.searchsorted(skey, skey, side="left").astype(jnp.int32)
+    rank_sorted = jnp.arange(K, dtype=jnp.int32) - first
+    rank = jnp.zeros(K, jnp.int32).at[order].set(rank_sorted)
+    return jnp.where(cand, rank, 0)
+
+
+def mag_claim(
+    mcfg: MagazineConfig,
+    mags: MagazineState,
+    want: Array,
+    mag_lane: Array,
+    rank: Array | None = None,
+) -> Tuple[MagazineState, Array, Array, Array]:
+    """Pop one page per wanting lane from its own magazine.
+
+    Lanes whose `mag_lane` is out of range (< 0 or >= n_lanes) never
+    claim.  Claimants of one magazine take distinct slots top-down in
+    lane order; lanes ranked past the magazine's depth miss and stay
+    with the caller (drop-through to the shared wavefront).
+
+    `rank` optionally replaces the `group_rank` stable sort with a
+    caller-computed rank (int32[K]).  It must be what `group_rank`
+    would return — 0..n-1 dense per magazine over the candidates, in
+    lane order.  Callers whose structure makes it trivial pass it to
+    skip the O(K log K) sort: all-distinct `mag_lane` => all zeros
+    (the jit engine's decode claim).
+
+    Returns (mags, pages, got, hits) — pages int32[K] global page ids
+    (-1 on miss), got bool[K], hits int32 scalar.  Zero shared-state
+    RMWs: only the magazines mutate."""
+    L, C = mags.pages.shape
+    lane = mag_lane.astype(jnp.int32)
+    cand = want & (lane >= 0) & (lane < L)
+    safe_lane = jnp.where(cand, lane, 0)
+    if rank is None:
+        rank = group_rank(safe_lane, cand, L)
+    else:
+        rank = jnp.where(cand, rank.astype(jnp.int32), 0)
+    depth_k = mags.depth[safe_lane]
+    got = cand & (rank < depth_k)
+    slot = jnp.where(got, depth_k - 1 - rank, 0)
+    pages = jnp.where(got, mags.pages[safe_lane, slot], -1)
+    # distinct (lane, slot) per winner, so one scatter empties them all
+    drop = (
+        jnp.zeros((L, C), bool).at[safe_lane, slot].max(got)
+    )
+    new_pages = jnp.where(drop, jnp.int32(-1), mags.pages)
+    pops = jnp.zeros(L, jnp.int32).at[safe_lane].add(
+        got.astype(jnp.int32)
+    )
+    return (
+        MagazineState(pages=new_pages, depth=mags.depth - pops),
+        pages,
+        got,
+        got.sum(dtype=jnp.int32),
+    )
+
+
+def mag_stash(
+    mcfg: MagazineConfig,
+    mags: MagazineState,
+    pages: Array,
+    want: Array,
+    mag_lane: Array,
+    rank: Array | None = None,
+) -> Tuple[MagazineState, Array]:
+    """Push one page per candidate lane into its own magazine.
+
+    Stashers of one magazine land in distinct slots bottom-up in lane
+    order; ranks past capacity drop through (stashed=False) so the
+    caller releases them on the ordinary merged path.
+
+    `rank` optionally replaces the `group_rank` stable sort, exactly
+    as in `mag_claim`: it must be dense 0..n-1 per magazine over the
+    candidates in lane order (a sparse rank would leave holes below
+    the depth counter).  The jit engine's retire burst is a lane-major
+    `[B, max_lane_pages]` block table whose rows fill prefix-wise, so
+    its rank is just the column index.
+
+    Returns (mags, stashed bool[K])."""
+    L, C = mags.pages.shape
+    lane = mag_lane.astype(jnp.int32)
+    cand = want & (lane >= 0) & (lane < L)
+    safe_lane = jnp.where(cand, lane, 0)
+    if rank is None:
+        rank = group_rank(safe_lane, cand, L)
+    else:
+        rank = jnp.where(cand, rank.astype(jnp.int32), 0)
+    depth_k = mags.depth[safe_lane]
+    slot = depth_k + rank
+    stashed = cand & (slot < C)
+    slot = jnp.where(stashed, slot, 0)
+    # distinct (lane, slot) per stasher; scatter-max over a -1 base so
+    # the single collision point (0, 0) resolves to the real page
+    upd = jnp.full((L, C), -1, jnp.int32).at[safe_lane, slot].max(
+        jnp.where(stashed, pages.astype(jnp.int32), -1)
+    )
+    new_pages = jnp.where(upd >= 0, upd, mags.pages)
+    adds = jnp.zeros(L, jnp.int32).at[safe_lane].add(
+        stashed.astype(jnp.int32)
+    )
+    return (
+        MagazineState(pages=new_pages, depth=mags.depth + adds),
+        stashed,
+    )

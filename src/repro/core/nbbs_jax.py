@@ -60,10 +60,13 @@ from repro.core.concurrent import (
     levels_from_sizes,
     wavefront_alloc,
 )
+from repro.core.magazine import MagazineState
 from repro.core.pool import (
     PoolConfig,
     pool_free_round,
+    pool_free_round_mag,
     pool_wavefront_alloc,
+    pool_wavefront_alloc_mag,
 )
 
 Array = jax.Array
@@ -290,3 +293,87 @@ def nb_pool_free_pages(
     )
     stats = {"free_merged_writes": merged, "free_logical_rmws": logical}
     return trees, freed, stats
+
+
+# ---------------------------------------------------------------------------
+# Magazine-fused leaf-only pool API (core/magazine.py, docs/design.md §10)
+# ---------------------------------------------------------------------------
+
+
+def nb_pool_alloc_pages_mag(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    active: Array,
+    lane_ids: Array,
+    max_rounds: int = 64,
+    mag_lane: Array | None = None,
+    mag_rank: Array | None = None,
+) -> Tuple[Array, MagazineState, Array, Array, Array, dict]:
+    """`nb_pool_alloc_pages` with the per-lane magazines fused in: each
+    active lane first pops its own magazine (`mag_lane`, -1 = no
+    magazine; zero shared-state RMWs) and only the misses drop through
+    into the same wavefront's slab/tree rounds.  Exhaustion triggers one
+    merged spill-back plus a retry, so failure semantics match the
+    magazines-off pool (core/pool.py `pool_wavefront_alloc_mag`).
+    `mag_rank` optionally skips the claim's group-rank sort — pass all
+    zeros when every lane has its own magazine (`mag_claim`).
+
+    Returns (trees, mags, shard, unit_offset, ok, stats); stats adds
+    'magazine_hits'/'magazine_spills'/'magazine_refills'."""
+    K = active.shape[0]
+    levels = jnp.full((K,), pcfg.tree.depth, dtype=jnp.int32)
+    trees, mags, nodes, shard, ok, stats = pool_wavefront_alloc_mag(
+        pcfg, trees, mags, levels, active, max_rounds,
+        lane_ids.astype(jnp.int32),
+        None if mag_lane is None else mag_lane.astype(jnp.int32),
+        mag_rank,
+    )
+    off = jnp.where(ok, nodes - (1 << pcfg.tree.depth), -1)
+    return trees, mags, shard, off, ok, stats
+
+
+def nb_pool_free_pages_mag(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    shards: Array,
+    unit_offsets: Array,
+    active: Array,
+    mag_lane: Array | None = None,
+    mag_rank: Array | None = None,
+    assume_owned: bool = False,
+) -> Tuple[Array, MagazineState, Array, dict]:
+    """`nb_pool_free_pages` with the magazine stash fused in: each
+    valid leaf handle whose lane has a magazine is recycled lane-
+    locally (pages the pool still marks allocated stay marked — the
+    magazine owns them until a claim or spill), and drop-throughs take
+    the same burst's merged slab/tree release.  `mag_rank` and the
+    static `assume_owned` are the stash fast paths for callers whose
+    handles are known distinct/owned (core/pool.py `_mag_stash_phase`).
+
+    Returns (trees, mags, freed bool[K], stats) with the free-side
+    'magazine_spills' (stash drop-throughs on full magazines)."""
+    shards = shards.astype(jnp.int32)
+    unit_offsets = unit_offsets.astype(jnp.int32)
+    in_range = (
+        (unit_offsets >= 0)
+        & (unit_offsets < (1 << pcfg.tree.depth))
+        & (shards >= 0)
+        & (shards < pcfg.n_shards)
+    )
+    nodes = jnp.where(in_range, (1 << pcfg.tree.depth) + unit_offsets, 0)
+    sh = jnp.where(in_range, shards, 0)
+    if mag_lane is None:
+        mag_lane = jnp.full(nodes.shape[0], -1, jnp.int32)
+    trees, mags, merged, logical, freed, _, spills = pool_free_round_mag(
+        pcfg, trees, mags, nodes, sh, active & in_range,
+        mag_lane.astype(jnp.int32),
+        mag_rank=mag_rank, assume_owned=assume_owned,
+    )
+    stats = {
+        "free_merged_writes": merged,
+        "free_logical_rmws": logical,
+        "magazine_spills": spills,
+    }
+    return trees, mags, freed, stats

@@ -60,9 +60,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import fastpath as fpmod
+from repro.core import magazine as magmod
 from repro.core.bits import FIB_HASH
 from repro.core.concurrent import TreeConfig, alloc_round, free_round
 from repro.core.fastpath import FastPathConfig
+from repro.core.magazine import MagazineConfig, MagazineState
 from repro.obs.schema import POOL_STEP_SLOTS, spec as metric_spec
 
 Array = jax.Array
@@ -83,17 +85,28 @@ class PoolConfig:
     of every shard's tree for a bitmap slab of fast-octave blocks
     (core/fastpath.py, docs/design.md §9); the slab's bitmap words are
     appended to each shard's state row so the pool remains one stacked
-    `[S, n_state_words]` array."""
+    `[S, n_state_words]` array.
+
+    `magazines`, when set, enables the per-lane recycling layer
+    (core/magazine.py, docs/design.md §10): callers thread a
+    `MagazineState` through the `*_mag` pool entry points and freed
+    leaf pages are recycled lane-locally with zero shared-state RMWs.
+    The magazine state is *per requester population*, not per shard, so
+    it lives alongside — not inside — the `[S, n_state_words]` array
+    (create it with `pool_init_magazines`)."""
 
     tree: TreeConfig
     n_shards: int = 1
     fastpath: FastPathConfig | None = None
+    magazines: MagazineConfig | None = None
 
     def __post_init__(self):
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if self.fastpath is not None:
             self.fastpath.validate(self.tree)
+        if self.magazines is not None:
+            self.magazines.validate()
 
     @property
     def n_words(self) -> int:
@@ -489,9 +502,527 @@ def pool_wavefront_step(
     stats["free_merged_writes"] = free_merged
     stats["free_logical_rmws"] = free_logical
     stats["freed"] = freed.sum(dtype=jnp.int32)
+    stats["magazine_hits"] = jnp.int32(0)
+    stats["magazine_spills"] = jnp.int32(0)
+    stats["magazine_refills"] = jnp.int32(0)
     # the reference path must expose at least the Pallas kernel's slots,
     # so every impl of nbbs_pool_wavefront_step names the same metrics
     missing = set(POOL_STEP_SLOTS) - set(stats)
     if missing:  # pragma: no cover - drift guard
         raise KeyError(f"pool step stats missing schema slots {missing}")
     return trees, nodes, shard, ok, _named(stats)
+
+
+# ---------------------------------------------------------------------------
+# Magazine fusion: lane-local recycling in front of the slab/tree rounds
+# (core/magazine.py, docs/design.md §10)
+# ---------------------------------------------------------------------------
+
+
+def pool_init_magazines(pcfg: PoolConfig, n_lanes: int) -> MagazineState:
+    """Empty magazines for a pool with a `MagazineConfig` attached."""
+    if pcfg.magazines is None:
+        raise ValueError("pool has no MagazineConfig attached")
+    return magmod.init_magazines(pcfg.magazines, n_lanes)
+
+
+def _gid_of(pcfg: PoolConfig, shard: Array, nodes: Array) -> Array:
+    """Global leaf page id of a (shard, leaf-node) handle."""
+    lo = 1 << pcfg.tree.depth
+    return shard.astype(jnp.int32) * lo + (nodes.astype(jnp.int32) - lo)
+
+
+def _gid_parts(pcfg: PoolConfig, gid: Array) -> Tuple[Array, Array]:
+    """(shard, leaf node) of a global page id (clamped for gid < 0)."""
+    lo = 1 << pcfg.tree.depth
+    g = jnp.maximum(gid.astype(jnp.int32), 0)
+    return g // lo, lo + g % lo
+
+
+def pool_mag_free_per_shard(pcfg: PoolConfig, mags: MagazineState) -> Array:
+    """int32[S]: stashed pages per shard (stashed pages stay marked
+    allocated in their shard's tree, so occupancy gauges add this to
+    `pool_free_units`)."""
+    return magmod.mag_free_per_shard(
+        mags, pcfg.n_shards, 1 << pcfg.tree.depth
+    )
+
+
+def pool_alloc_round_mag(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    levels: Array,
+    pending: Array,
+    shard: Array,
+    attempt: Array,
+    nodes: Array,
+    mag_lane: Array,
+    mag_rank: Array | None = None,
+):
+    """One pool arbitration round with the magazine claim fused in
+    front: leaf-octave lanes first pop their own magazine (zero
+    shared-state RMWs; the serving shard becomes the popped page's
+    recorded shard), and only the misses fall through into this SAME
+    round's fastpath-then-tree wavefront (`pool_alloc_round`).
+
+    `mag_rank` optionally skips the claim's group-rank sort when the
+    caller's lane structure makes the rank trivial (`mag_claim`).
+
+    Returns (trees, mags, nodes, pending, shard, attempt, merged,
+    logical, won, fp_hits, mag_got) — mag_got bool[K] marks the lanes
+    a magazine pop served this round."""
+    cfg = pcfg.tree
+    want = pending & (levels == cfg.depth)
+    mags, gids, got, _ = magmod.mag_claim(
+        pcfg.magazines, mags, want, mag_lane, rank=mag_rank
+    )
+    g_shard, g_node = _gid_parts(pcfg, gids)
+    nodes = jnp.where(got, g_node, nodes)
+    shard = jnp.where(got, g_shard, shard)
+    pending = pending & ~got
+    (trees, nodes, pending, shard, attempt,
+     merged, logical, won, fp_hits) = pool_alloc_round(
+        pcfg, trees, levels, pending, shard, attempt, nodes
+    )
+    return (
+        trees, mags, nodes, pending, shard, attempt,
+        merged, logical, won | got, fp_hits, got,
+    )
+
+
+def _mag_stash_phase(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    nodes: Array,
+    shard: Array,
+    active: Array,
+    mag_lane: Array,
+    mag_rank: Array | None = None,
+    assume_owned: bool = False,
+):
+    """The stash pre-pass of a magazine-fused release burst.
+
+    A handle may stash only if (a) it is a leaf node, (b) its lane has
+    a magazine, (c) the pool currently marks it allocated — the exact
+    ownership predicates the release paths themselves use
+    (`layout.node_occ_at` for tree leaves, the slab bit for slab-range
+    leaves, never carved junk) — and (d) it is the min-lane instance of
+    its page in the burst (the same dedup rule as `free_round`, lifted
+    to the global page space so a stash and a tree-free of one page
+    cannot both happen).  Every other instance of a *stashed* page is
+    dropped from the burst; everything that did not stash falls through
+    unchanged to the ordinary merged release.
+
+    `assume_owned=True` (static) skips predicates (c) and (d): the
+    caller asserts every active handle is a distinct page the pool
+    currently marks allocated.  The jit engine qualifies — its block
+    tables hold exactly the pages its lanes allocated — and the skip
+    removes an [S, K] occupancy derivation plus a page-space scatter
+    from every step.  `mag_rank` optionally skips the group-rank sort
+    (`mag_stash`); with `assume_owned` the candidate set is exactly
+    `active & leaf & (mag_lane >= 0)`, so the caller can rank it.
+
+    Returns (mags, active_out, stashed, spills)."""
+    cfg = pcfg.tree
+    S = pcfg.n_shards
+    K = nodes.shape[0]
+    TW = cfg.n_state_words
+    lo = 1 << cfg.depth
+    nodes = nodes.astype(jnp.int32)
+    in_leaf = active & (nodes >= lo) & (nodes < 2 * lo)
+    safe_nodes = jnp.where(in_leaf, nodes, lo)
+    safe_shard = jnp.clip(shard.astype(jnp.int32), 0, S - 1)
+
+    if assume_owned:
+        gid = _gid_of(pcfg, safe_shard, safe_nodes)
+        stash_cand = in_leaf & (mag_lane >= 0)
+        mags, stashed = magmod.mag_stash(
+            pcfg.magazines, mags, gid, stash_cand, mag_lane,
+            rank=mag_rank,
+        )
+        spills = (stash_cand & ~stashed).sum(dtype=jnp.int32)
+        return mags, active & ~stashed, stashed, spills
+
+    fp = pcfg.fastpath
+    if fp is not None and fpmod.fp_level(cfg, fp) == cfg.depth:
+        slab_mask = in_leaf & fpmod.in_slab_leaf(cfg, fp, safe_nodes)
+        occ_s = jax.vmap(functools.partial(fpmod._slab_occ, cfg, fp))(
+            trees[:, TW:]
+        )  # [S, n_slots]
+        base = fpmod.fp_node_base(cfg, fp)
+        slot = jnp.clip(
+            safe_nodes - base, 0, fpmod.fp_n_slots(cfg, fp) - 1
+        )
+        occ_fp = occ_s[safe_shard, slot]
+    else:
+        slab_mask = jnp.zeros(K, bool)
+        occ_fp = jnp.zeros(K, bool)
+    junk = (
+        fpmod.in_carved_junk(cfg, fp, safe_nodes)
+        if fp is not None
+        else jnp.zeros(K, bool)
+    )
+    occ_tree_s = jax.vmap(
+        lambda row: cfg.layout.node_occ_at(cfg, row[:TW], safe_nodes)
+    )(trees)  # [S, K]
+    occ_tree = occ_tree_s[safe_shard, jnp.arange(K, dtype=jnp.int32)]
+    owned = jnp.where(slab_mask, occ_fp, occ_tree & ~junk)
+
+    # burst-wide min-lane dedup over the global page space: only one
+    # instance of a page may stash, and a stashed page's duplicates
+    # must not fall through to a tree-side free
+    ids = jnp.arange(K, dtype=jnp.int32)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    key = jnp.where(in_leaf, _gid_of(pcfg, safe_shard, safe_nodes), 0)
+    own = jnp.full(S * lo, big, jnp.int32).at[key].min(
+        jnp.where(in_leaf, ids, big)
+    )
+    winner = in_leaf & (own[key] == ids)
+
+    stash_cand = winner & (mag_lane >= 0) & owned
+    mags, stashed = magmod.mag_stash(
+        pcfg.magazines, mags, key, stash_cand, mag_lane
+    )
+    spills = (stash_cand & ~stashed).sum(dtype=jnp.int32)
+    stash_mark = jnp.zeros(S * lo, bool).at[key].max(stashed)
+    active_out = active & ~(in_leaf & stash_mark[key])
+    return mags, active_out, stashed, spills
+
+
+def pool_free_round_mag(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    nodes: Array,
+    shard: Array,
+    active: Array,
+    mag_lane: Array,
+    mag_rank: Array | None = None,
+    assume_owned: bool = False,
+):
+    """Magazine-fused release burst: the stash pre-pass recycles leaf
+    handles lane-locally (zero shared-state RMWs), then everything that
+    dropped through — full magazines, non-leaf handles, magazine-less
+    lanes — takes the SAME round's ordinary merged slab/tree release
+    (`pool_free_round`).  `mag_rank`/`assume_owned` are the stash
+    pre-pass fast paths (`_mag_stash_phase`).
+
+    Returns (trees, mags, merged, logical, freed, stashes, spills)."""
+    mags, active2, stashed, spills = _mag_stash_phase(
+        pcfg, trees, mags, nodes, shard, active, mag_lane,
+        mag_rank=mag_rank, assume_owned=assume_owned,
+    )
+    trees, merged, logical, freed = pool_free_round(
+        pcfg, trees, nodes, shard, active2
+    )
+    return (
+        trees, mags, merged, logical, freed | stashed,
+        stashed.sum(dtype=jnp.int32), spills,
+    )
+
+
+def _mag_spill_all(pcfg: PoolConfig, trees: Array, mags: MagazineState):
+    """Release every stashed page back to its shard's slab/tree in one
+    merged burst.  Returns (trees, mags, merged, logical, n_spilled)."""
+    gids, live = magmod.mag_contents(mags)
+    sh, nd = _gid_parts(pcfg, gids)
+    trees, merged, logical, _ = pool_free_round(pcfg, trees, nd, sh, live)
+    return (
+        trees,
+        magmod.mag_clear(mags, jnp.bool_(True)),
+        merged,
+        logical,
+        live.sum(dtype=jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def pool_wavefront_alloc_mag(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    levels: Array,
+    active: Array,
+    max_rounds: int = 64,
+    lane_ids: Array | None = None,
+    mag_lane: Array | None = None,
+    mag_rank: Array | None = None,
+):
+    """Allocate a wavefront of requests with magazines fused in.
+
+    Three fused phases, all in-graph:
+
+      1. the ordinary pool wavefront with the magazine claim in front
+         of every round (`pool_alloc_round_mag`; claims can only land
+         in the first round since nothing restocks mid-wavefront, but
+         misses fall through into the same round's slab/tree pass);
+      2. if any lane failed outright while magazines still hold pages,
+         ONE merged spill-back releases every stashed page to its tree
+         (`magazine_spills`) — magazines never strand capacity;
+      3. the failed lanes rerun the wavefront from their home shard
+         against the replenished trees.
+
+    Phase 2+3 make a magazines-on pool capacity-equivalent to
+    magazines-off: an allocation fails only if the pool as a whole
+    cannot serve it.  `mag_rank` optionally skips the claim's
+    group-rank sort (`mag_claim`); a fixed rank stays valid across
+    rounds because nothing restocks mid-wavefront — every round-2+
+    claim misses under any ranking.  Returns (trees, mags, nodes,
+    shard, ok, stats); stats adds 'magazine_hits'/'magazine_spills'/
+    'magazine_refills' to the `pool_wavefront_alloc` counters."""
+    if pcfg.magazines is None:
+        raise ValueError("pool_wavefront_alloc_mag needs pcfg.magazines")
+    K = levels.shape[0]
+    if lane_ids is None:
+        lane_ids = jnp.arange(K, dtype=jnp.int32)
+    if mag_lane is None:
+        mag_lane = jnp.full(K, -1, jnp.int32)
+    home = home_shard(pcfg, lane_ids)
+
+    def round_body(carry):
+        (trees, mags, nodes, pending, shard, attempt, magged,
+         rounds, merged, logical, fph) = carry
+        (trees, mags, nodes, pending, shard, attempt,
+         m, l, _, fh, got) = pool_alloc_round_mag(
+            pcfg, trees, mags, levels, pending, shard, attempt, nodes,
+            mag_lane, mag_rank=mag_rank,
+        )
+        return (
+            trees, mags, nodes, pending, shard, attempt, magged | got,
+            rounds + 1, merged + m, logical + l, fph + fh,
+        )
+
+    def cond(carry):
+        pending, rounds = carry[3], carry[7]
+        return pending.any() & (rounds < max_rounds)
+
+    init = (
+        trees, mags,
+        jnp.zeros(K, jnp.int32), active, home,
+        jnp.zeros(K, jnp.int32), jnp.zeros(K, bool),
+        jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+    )
+    (trees, mags, nodes, _, shard, _, magged,
+     rounds, merged, logical, fph) = lax.while_loop(
+        cond, round_body, init
+    )
+    magh = magged.sum(dtype=jnp.int32)
+    ok1 = nodes > 0
+    failed = active & ~ok1
+
+    # phase 2: exhaustion spill-back (one merged burst, at most once)
+    do_spill = failed.any() & (magmod.mag_total(mags) > 0)
+
+    def spill(args):
+        trees, mags = args
+        return _mag_spill_all(pcfg, trees, mags)
+
+    def no_spill(args):
+        trees, mags = args
+        z = jnp.int32(0)
+        return trees, mags, z, z, z
+
+    trees, mags, sp_merged, sp_logical, n_spill = lax.cond(
+        do_spill, spill, no_spill, (trees, mags)
+    )
+
+    # phase 3: failed lanes retry from home against replenished trees
+    retry = failed & do_spill
+
+    def round_body2(carry):
+        (trees, nodes, pending, shard, attempt,
+         rounds, merged, logical, fph) = carry
+        (trees, nodes, pending, shard, attempt,
+         m, l, _, fh) = pool_alloc_round(
+            pcfg, trees, levels, pending, shard, attempt, nodes
+        )
+        return (
+            trees, nodes, pending, shard, attempt,
+            rounds + 1, merged + m, logical + l, fph + fh,
+        )
+
+    def cond2(carry):
+        pending, rounds = carry[2], carry[5]
+        return pending.any() & (rounds < max_rounds)
+
+    shard = jnp.where(retry, home, shard)
+    init2 = (
+        trees, nodes, retry, shard, jnp.zeros(K, jnp.int32),
+        jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+    )
+    (trees, nodes, _, shard, _,
+     rounds2, merged2, logical2, fph2) = lax.while_loop(
+        cond2, round_body2, init2
+    )
+    ok = nodes > 0
+
+    if pcfg.fastpath is None:
+        fast_total = jnp.int32(0)
+    else:
+        fast = levels == fpmod.fp_level(pcfg.tree, pcfg.fastpath)
+        fast_total = (active & fast).sum(dtype=jnp.int32)
+        if fpmod.fp_level(pcfg.tree, pcfg.fastpath) == pcfg.tree.depth:
+            # magazine-served lanes never reached the slab
+            fast_total = fast_total - magh
+    hits = fph + fph2
+    stats = _named({
+        "rounds": rounds + rounds2,
+        "merged_writes": merged + merged2 + sp_merged,
+        "logical_rmws": logical + logical2 + sp_logical,
+        # a magazine pop serves a lane off the popped page's recorded
+        # shard — that is recycling, not an overflow probe
+        "overflows": (ok & ~magged & (shard != home)).sum(dtype=jnp.int32),
+        "fastpath_hits": hits,
+        "fastpath_spills": fast_total - hits,
+        "magazine_hits": magh,
+        "magazine_spills": n_spill,
+        "magazine_refills": jnp.int32(0),
+    })
+    return trees, mags, nodes, shard, ok, stats
+
+
+@functools.partial(jax.jit, static_argnums=(0, 8))
+def pool_wavefront_free_mag(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    nodes: Array,
+    shard: Array,
+    active: Array,
+    mag_lane: Array | None = None,
+    mag_rank: Array | None = None,
+    assume_owned: bool = False,
+):
+    """Jitted magazine-fused pool release.  `mag_rank`/`assume_owned`
+    are the stash pre-pass fast paths (`_mag_stash_phase`).
+    Returns (trees, mags, freed, stats)."""
+    if pcfg.magazines is None:
+        raise ValueError("pool_wavefront_free_mag needs pcfg.magazines")
+    if mag_lane is None:
+        mag_lane = jnp.full(nodes.shape[0], -1, jnp.int32)
+    trees, mags, merged, logical, freed, stashes, spills = (
+        pool_free_round_mag(
+            pcfg, trees, mags, nodes, shard, active, mag_lane,
+            mag_rank=mag_rank, assume_owned=assume_owned,
+        )
+    )
+    return trees, mags, freed, _named({
+        "merged_writes": merged,
+        "logical_rmws": logical,
+        "magazine_spills": spills,
+    })
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def pool_magazine_drain(
+    pcfg: PoolConfig, trees: Array, mags: MagazineState
+):
+    """Release every stashed page back to the pool (one merged burst
+    per shard) and empty the magazines.  Draining restores the exact
+    occupancy a magazines-off pool would have — the differential
+    baseline (tests/test_magazine.py, tests/test_properties.py).
+
+    Returns (trees, mags, stats)."""
+    if pcfg.magazines is None:
+        raise ValueError("pool_magazine_drain needs pcfg.magazines")
+    trees, mags, merged, logical, n = _mag_spill_all(pcfg, trees, mags)
+    return trees, mags, _named({
+        "free_merged_writes": merged,
+        "free_logical_rmws": logical,
+        "magazine_spills": n,
+    })
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def pool_magazine_refill(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    want_lanes: Array,
+):
+    """Batched magazine refill: pre-claim up to `refill_batch` leaf
+    pages for every selected lane through ONE merged pool wavefront
+    (the PR 1/2 burst machinery — one `pool_wavefront_alloc` per
+    refill, never per page) and stash them.
+
+    Returns (trees, mags, stats) with 'magazine_refills' counting the
+    pages that landed in magazines."""
+    mcfg = pcfg.magazines
+    if mcfg is None or mcfg.refill_batch < 1:
+        raise ValueError(
+            "pool_magazine_refill needs pcfg.magazines.refill_batch >= 1"
+        )
+    B = mcfg.refill_batch
+    L, C = mags.pages.shape
+    cfg = pcfg.tree
+    room = jnp.clip(C - mags.depth, 0, B)
+    r_ids = jnp.arange(B, dtype=jnp.int32)
+    req = want_lanes[:, None] & (r_ids[None, :] < room[:, None])
+    lane_ids = jnp.repeat(jnp.arange(L, dtype=jnp.int32), B)
+    levels = jnp.full(L * B, cfg.depth, jnp.int32)
+    trees, nodes, shard, ok, astats = pool_wavefront_alloc(
+        pcfg, trees, levels, req.reshape(-1), 64, lane_ids
+    )
+    gids = _gid_of(pcfg, shard, nodes)
+    mags, stashed = magmod.mag_stash(mcfg, mags, gids, ok, lane_ids)
+    # room was reserved per lane, so every claim stashes; the release
+    # below is pure insurance against a leak if that ever changes
+    leak = ok & ~stashed
+    trees, _, _, _ = pool_free_round(pcfg, trees, nodes, shard, leak)
+    stats = dict(astats)
+    stats["magazine_refills"] = stashed.sum(dtype=jnp.int32)
+    return trees, mags, _named(stats)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 8, 14))
+def pool_wavefront_step_mag(
+    pcfg: PoolConfig,
+    trees: Array,
+    mags: MagazineState,
+    free_nodes: Array,
+    free_shard: Array,
+    free_active: Array,
+    alloc_levels: Array,
+    alloc_active: Array,
+    max_rounds: int = 64,
+    lane_ids: Array | None = None,
+    free_mag_lane: Array | None = None,
+    alloc_mag_lane: Array | None = None,
+    free_mag_rank: Array | None = None,
+    alloc_mag_rank: Array | None = None,
+    assume_owned_frees: bool = False,
+):
+    """Magazine-fused pool scheduler round: the stash-then-release pass
+    first, then the claim-then-wavefront allocation.  Same stats slots
+    as `pool_wavefront_step` with the magazine counters live.  The
+    `*_mag_rank`/`assume_owned_frees` fast paths are `_mag_stash_phase`
+    and `mag_claim`'s caller-computed-rank contracts.
+
+    Returns (trees, mags, nodes, shard, ok, stats)."""
+    if pcfg.magazines is None:
+        raise ValueError("pool_wavefront_step_mag needs pcfg.magazines")
+    if free_mag_lane is None:
+        free_mag_lane = jnp.full(free_nodes.shape[0], -1, jnp.int32)
+    trees, mags, f_merged, f_logical, freed, _, f_spills = (
+        pool_free_round_mag(
+            pcfg, trees, mags, free_nodes, free_shard, free_active,
+            free_mag_lane,
+            mag_rank=free_mag_rank, assume_owned=assume_owned_frees,
+        )
+    )
+    trees, mags, nodes, shard, ok, stats = pool_wavefront_alloc_mag(
+        pcfg, trees, mags, alloc_levels, alloc_active, max_rounds,
+        lane_ids, alloc_mag_lane, alloc_mag_rank,
+    )
+    stats = dict(stats)
+    stats["free_writes"] = f_merged
+    stats["free_merged_writes"] = f_merged
+    stats["free_logical_rmws"] = f_logical
+    stats["freed"] = freed.sum(dtype=jnp.int32)
+    stats["magazine_spills"] = stats["magazine_spills"] + f_spills
+    missing = set(POOL_STEP_SLOTS) - set(stats)
+    if missing:  # pragma: no cover - drift guard
+        raise KeyError(f"pool step stats missing schema slots {missing}")
+    return trees, mags, nodes, shard, ok, _named(stats)

@@ -342,6 +342,10 @@ def _pool_step_kernel(
         jnp.concatenate([tree, slab]) if fp is not None else tree
     )
     nodes_ref[0] = nodes
+    # the magazine slots are structurally zero here: magazines are
+    # per-lane state shared across shards, so the claim/stash phases
+    # run in the `ops.nbbs_pool_wavefront_step` driver around the
+    # launches (that driver fills these slots in its aggregate row)
     stats_ref[0] = pack_slots(POOL_STEP_SLOTS, {
         "rounds": rounds,
         "merged_writes": merged,
@@ -350,6 +354,9 @@ def _pool_step_kernel(
         "free_logical_rmws": free_logical,
         "freed": n_freed,
         "fastpath_hits": hits,
+        "magazine_hits": jnp.int32(0),
+        "magazine_spills": jnp.int32(0),
+        "magazine_refills": jnp.int32(0),
     })
 
 
@@ -374,9 +381,12 @@ def pool_wavefront_step_pallas(
     Each lane allocates on `alloc_shard[k]` and each free lands on
     `free_shard[f]`; overflow re-routing across launches is the caller's
     job (`ops.nbbs_pool_wavefront_step`).  Returns (trees, nodes, ok,
-    stats[S, 7]) with per-shard stats rows = [alloc_rounds,
-    alloc_merged, alloc_logical, free_merged, free_logical, freed,
-    fastpath_hits] (the last always 0 without a configured fastpath).
+    stats[S, len(POOL_STEP_SLOTS)]) with per-shard stats rows in
+    POOL_STEP_SLOTS order — [alloc_rounds, alloc_merged, alloc_logical,
+    free_merged, free_logical, freed, fastpath_hits, magazine_hits,
+    magazine_spills, magazine_refills]; fastpath_hits is 0 without a
+    configured fastpath and the magazine slots are always 0 (filled by
+    the driver, see `_pool_step_kernel`).
     """
     if active is None:
         active = jnp.ones(levels.shape, dtype=jnp.int32)

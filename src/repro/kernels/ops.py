@@ -28,8 +28,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fastpath
+from repro.core import magazine as magmod
 from repro.core.concurrent import TreeConfig, wavefront_step
-from repro.core.pool import PoolConfig, home_shard, pool_wavefront_step
+from repro.core.pool import (
+    PoolConfig,
+    _gid_parts,
+    _mag_spill_all,
+    _mag_stash_phase,
+    home_shard,
+    pool_wavefront_alloc,
+    pool_wavefront_step,
+    pool_wavefront_step_mag,
+)
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.nbbs_alloc import (
@@ -239,6 +249,9 @@ def nbbs_pool_wavefront_step(
     active: Array | None = None,
     max_rounds: int = 64,
     impl: str = "auto",
+    mags=None,
+    free_mag_lane: Array | None = None,
+    alloc_mag_lane: Array | None = None,
 ):
     """Pooled mixed release+allocation step across S sharded trees.
 
@@ -250,6 +263,18 @@ def nbbs_pool_wavefront_step(
     order before the next launch (an attempt-granular linearization of
     the same routing; identical to the reference whenever no lane
     overflows).  Returns (trees, nodes, shard, ok, stats).
+
+    With `mags` (a `core.magazine.MagazineState`; requires
+    `pcfg.magazines`), the magazine layer fuses around the kernel
+    launches: the stash pre-pass recycles freed leaf handles of
+    `free_mag_lane` lanes before the first launch, the claim phase
+    serves `alloc_mag_lane` lanes before any launch runs, and on
+    exhaustion one merged spill-back plus a reference-path retry keeps
+    failure semantics magazines-off-equivalent.  Magazines are per-lane
+    state shared across shards, so these phases live here in the driver
+    — the per-shard kernel rows keep their magazine slots zero — and
+    the driver fills the aggregate 'magazine_*' slots.  Returns
+    (trees, mags, nodes, shard, ok, stats) in this mode.
     """
     impl = _resolve(impl)
     K = levels.shape[0]
@@ -257,10 +282,18 @@ def nbbs_pool_wavefront_step(
         active = jnp.ones(levels.shape, dtype=bool)
     if lane_ids is None:
         lane_ids = jnp.arange(K, dtype=jnp.int32)
+    if mags is not None and pcfg.magazines is None:
+        raise ValueError("mags given but pcfg has no MagazineConfig")
     if impl == "reference":
-        return pool_wavefront_step(
-            pcfg, trees, free_nodes, free_shard, free_active, levels,
-            active, max_rounds, lane_ids,
+        if mags is None:
+            return pool_wavefront_step(
+                pcfg, trees, free_nodes, free_shard, free_active, levels,
+                active, max_rounds, lane_ids,
+            )
+        return pool_wavefront_step_mag(
+            pcfg, trees, mags, free_nodes, free_shard, free_active,
+            levels, active, max_rounds, lane_ids, free_mag_lane,
+            alloc_mag_lane,
         )
     S = pcfg.n_shards
     home = home_shard(pcfg, lane_ids)
@@ -269,6 +302,30 @@ def nbbs_pool_wavefront_step(
     nodes = jnp.zeros(K, dtype=jnp.int32)
     out_shard = shard
     fa = free_active
+    mag_got = jnp.zeros(K, bool)
+    f_spills = jnp.int32(0)
+    n_stashed = jnp.int32(0)
+    if mags is not None:
+        # stash pre-pass: recycle freed leaf handles lane-locally; the
+        # drop-through mask `fa` feeds the first launch's merged release
+        if free_mag_lane is None:
+            free_mag_lane = jnp.full(free_nodes.shape[0], -1, jnp.int32)
+        mags, fa, stashed, f_spills = _mag_stash_phase(
+            pcfg, trees, mags, free_nodes, free_shard, fa, free_mag_lane
+        )
+        n_stashed = stashed.sum(dtype=jnp.int32)
+        # claim phase: leaf-octave lanes pop their magazines and skip
+        # the launches entirely; misses stay pending
+        if alloc_mag_lane is None:
+            alloc_mag_lane = jnp.full(K, -1, jnp.int32)
+        want = pending & (levels == pcfg.tree.depth)
+        mags, gids, mag_got, _ = magmod.mag_claim(
+            pcfg.magazines, mags, want, alloc_mag_lane
+        )
+        g_sh, g_nd = _gid_parts(pcfg, gids)
+        nodes = jnp.where(mag_got, g_nd, nodes)
+        out_shard = jnp.where(mag_got, g_sh, out_shard)
+        pending = pending & ~mag_got
     # aggregation slots come from the same schema tuple the kernel
     # packs its per-shard stat rows with — neither side can drift
     agg = {name: jnp.int32(0) for name in POOL_STEP_SLOTS}
@@ -303,13 +360,60 @@ def nbbs_pool_wavefront_step(
             pending.any()
         ):
             break
+    if mags is not None:
+        # exhaustion spill-back + retry: one merged release of every
+        # stashed page, then failed lanes rerun on the reference
+        # wavefront (the rare slow path; launches stay magazine-free)
+        failed = active & ~(nodes > 0)
+        do_spill = failed.any() & (magmod.mag_total(mags) > 0)
+
+        def spill(args):
+            return _mag_spill_all(pcfg, *args)
+
+        def no_spill(args):
+            trees, mags = args
+            z = jnp.int32(0)
+            return trees, mags, z, z, z
+
+        trees, mags, sp_m, sp_l, n_spill = jax.lax.cond(
+            do_spill, spill, no_spill, (trees, mags)
+        )
+        retry = failed & do_spill
+        trees, n2, s2, ok2, rstats = pool_wavefront_alloc(
+            pcfg, trees, levels, retry, max_rounds, lane_ids
+        )
+        won2 = retry & ok2
+        nodes = jnp.where(won2, n2, nodes)
+        out_shard = jnp.where(won2, s2, out_shard)
+        agg["rounds"] = agg["rounds"] + rstats["rounds"]
+        agg["merged_writes"] = (
+            agg["merged_writes"] + rstats["merged_writes"] + sp_m
+        )
+        agg["logical_rmws"] = (
+            agg["logical_rmws"] + rstats["logical_rmws"] + sp_l
+        )
+        agg["fastpath_hits"] = (
+            agg["fastpath_hits"] + rstats["fastpath_hits"]
+        )
+        agg["freed"] = agg["freed"] + n_stashed
+        agg["magazine_hits"] = mag_got.sum(dtype=jnp.int32)
+        agg["magazine_spills"] = f_spills + n_spill
     ok = nodes > 0
     agg["free_writes"] = agg["free_merged_writes"]  # legacy alias
-    agg["overflows"] = (ok & (out_shard != home)).sum(dtype=jnp.int32)
+    # a magazine pop serves a lane off the popped page's recorded
+    # shard — recycling, not an overflow probe
+    agg["overflows"] = (
+        (ok & ~mag_got & (out_shard != home)).sum(dtype=jnp.int32)
+    )
     if pcfg.fastpath is None:
         fast_total = jnp.int32(0)
     else:
         fast = levels == fastpath.fp_level(pcfg.tree, pcfg.fastpath)
         fast_total = (active & fast).sum(dtype=jnp.int32)
+        if fastpath.fp_level(pcfg.tree, pcfg.fastpath) == pcfg.tree.depth:
+            # magazine-served lanes never reached the slab
+            fast_total = fast_total - mag_got.sum(dtype=jnp.int32)
     agg["fastpath_spills"] = fast_total - agg["fastpath_hits"]
+    if mags is not None:
+        return trees, mags, nodes, out_shard, ok, agg
     return trees, nodes, out_shard, ok, agg

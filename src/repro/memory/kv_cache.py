@@ -58,11 +58,11 @@ Two host views live here (docs/design.md §8):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.bits import FIB_HASH  # host/device routing must agree
+from repro.core.bits import FIB_HASH, OCC  # host/device routing must agree
 from repro.core.ref import NBBSRef, _ilog2
 
 
@@ -91,6 +91,9 @@ class PagedKVManager:
         layout: Optional[str] = None,
         fastpath: bool = False,
         fastpath_slab_level: int = 2,
+        magazines: int = 0,
+        magazine_refill: int = 0,
+        mag_lanes: int = 16,
     ) -> None:
         if num_pages & (num_pages - 1):
             raise ValueError("num_pages must be a power of two")
@@ -125,6 +128,27 @@ class PagedKVManager:
             )
             for s in range(n_shards)
         ]
+        # Per-lane magazines (host mirror of core/magazine.py): a
+        # sequence group (`seq_id % mag_lanes`) keeps a small LIFO of
+        # recently freed single pages and recycles them without
+        # touching the slab or the tree.  Because this manager's
+        # invariant is "a sequence's runs all live on its recorded
+        # shard", the host magazines are *shard-local* stacks —
+        # `_mags[lane][shard]`, capacity `magazines` each — a benign
+        # divergence from the device's flat per-lane magazine
+        # (docs/design.md §10): a cross-shard pop would migrate a run
+        # off the sequence's shard.
+        if magazines < 0 or magazine_refill < 0 or mag_lanes < 1:
+            raise ValueError("bad magazine configuration")
+        self.magazines = magazines
+        self.magazine_refill = magazine_refill
+        self.mag_lanes = mag_lanes
+        self.magazine_hits = 0
+        self.magazine_spills = 0
+        self.magazine_refills = 0
+        self._mags: List[List[List[int]]] = [
+            [[] for _ in range(n_shards)] for _ in range(mag_lanes)
+        ]
         # Fixed-size fast path (host mirror of core/fastpath.py): the
         # leftmost 1/2^slab_level of each shard is carved out of its
         # buddy tree at init and served as single pages from a bitmap.
@@ -158,6 +182,34 @@ class PagedKVManager:
             self.slab_pages = 0
         self.seqs: Dict[int, SeqAlloc] = {}
 
+    def mag_lane(self, seq_id: int) -> int:
+        """Magazine lane of a sequence (-1 with magazines off)."""
+        return seq_id % self.mag_lanes if self.magazines else -1
+
+    def mag_stashed(self) -> int:
+        """Pages currently held across every magazine."""
+        return sum(
+            len(st) for lane in self._mags for st in lane
+        )
+
+    def _mag_spill_all(self) -> None:
+        """Release every stashed page back to its shard (slab/tree
+        routing) and empty the magazines — the host mirror of the
+        pool's exhaustion spill-back burst."""
+        for lane in self._mags:
+            for s, stack in enumerate(lane):
+                for p in stack:
+                    self.magazine_spills += 1
+                    local = p - s * self.pages_per_shard
+                    if (
+                        self.fastpath
+                        and 0 <= local < self.slab_pages
+                    ):
+                        self._slab_free[s][local] = True
+                    else:
+                        self.buddies[s].nb_free(p)
+                stack.clear()
+
     @property
     def buddy(self) -> NBBSRef:
         """The single tree of an unsharded pool (back-compat accessor)."""
@@ -190,7 +242,15 @@ class PagedKVManager:
             if self.fastpath
             else None
         )
-        return PoolConfig(tree, self.n_shards, fastpath=fp)
+        mcfg = None
+        if self.magazines:
+            from repro.core.magazine import MagazineConfig
+
+            mcfg = MagazineConfig(
+                mag_cap=self.magazines,
+                refill_batch=self.magazine_refill,
+            )
+        return PoolConfig(tree, self.n_shards, fastpath=fp, magazines=mcfg)
 
     # ------------------------------------------------------------------
     def home_shard(self, seq_id: int) -> int:
@@ -204,10 +264,35 @@ class PagedKVManager:
     def _next_pow2(self, n: int) -> int:
         return 1 << (n - 1).bit_length()
 
-    def _alloc_run(self, shard: int, run: int) -> Optional[range]:
-        """One run on one shard: single-page runs probe the fastpath
-        slab first (O(1) find-first-zero claim), everything else — and
-        slab-exhausted spills — takes the buddy climb."""
+    def _alloc_run(
+        self, shard: int, run: int, mag_lane: int = -1
+    ) -> Optional[range]:
+        """One run on one shard: single-page runs pop the requester's
+        magazine first (pure recycling, zero allocator work), then
+        probe the fastpath slab, then take the buddy climb."""
+        if self.magazines and run == 1 and mag_lane >= 0:
+            stack = self._mags[mag_lane][shard]
+            if not stack and self.magazine_refill:
+                # Batched refill: pre-claim a burst of single pages
+                # into the magazine so the next misses become pops
+                # (one burst per refill, not one climb per page).
+                room = min(
+                    self.magazine_refill, self.magazines - len(stack)
+                )
+                for _ in range(room):
+                    rr = self._alloc_run_raw(shard, 1)
+                    if rr is None:
+                        break
+                    stack.append(rr.start)
+                    self.magazine_refills += 1
+            if stack:
+                self.magazine_hits += 1
+                page = stack.pop()
+                return range(page, page + 1)
+        return self._alloc_run_raw(shard, run)
+
+    def _alloc_run_raw(self, shard: int, run: int) -> Optional[range]:
+        """The magazine-oblivious slab-then-buddy path."""
         if self.fastpath and run == 1:
             free = np.flatnonzero(self._slab_free[shard])
             if len(free):
@@ -222,27 +307,50 @@ class PagedKVManager:
             return None
         return range(addr, addr + run)
 
-    def _free_run(self, shard: int, r: range) -> None:
-        """Release one run, routing by page-id range: pages under the
-        shard's slab clear their bitmap bit, the rest free through the
-        buddy (the host mirror of `pool_free_round`'s routing)."""
+    def _maybe_stash(self, shard: int, r: range, mag_lane: int) -> bool:
+        """Try to park a single-page run in the requester's magazine
+        instead of releasing it.  True = stashed (the page stays
+        allocated in the slab/tree and is owned by the magazine); a
+        full magazine counts a drop-through spill and falls back to
+        the ordinary release routing."""
+        if not self.magazines or mag_lane < 0 or len(r) != 1:
+            return False
+        stack = self._mags[mag_lane][shard]
+        if len(stack) < self.magazines:
+            stack.append(r.start)
+            return True
+        self.magazine_spills += 1
+        return False
+
+    def _free_run(self, shard: int, r: range, mag_lane: int = -1) -> None:
+        """Release one run, routing by page-id range: single-page runs
+        stash into the requester's magazine when there is room, pages
+        under the shard's slab clear their bitmap bit, the rest free
+        through the buddy (the host mirror of `pool_free_round_mag`'s
+        stash-then-route)."""
+        if self._maybe_stash(shard, r, mag_lane):
+            return
         local = r.start - shard * self.pages_per_shard
         if self.fastpath and len(r) == 1 and 0 <= local < self.slab_pages:
             self._slab_free[shard][local] = True
             return
         self.buddies[shard].nb_free(r.start)
 
-    def _try_admit_on(self, shard: int, need: int) -> Optional[List[range]]:
+    def _try_admit_on(
+        self, shard: int, need: int, mag_lane: int = -1
+    ) -> Optional[List[range]]:
         """Allocate `need` pages worth of runs on one shard, or roll back
-        and return None (an admission is all-on-one-shard or nothing)."""
+        and return None (an admission is all-on-one-shard or nothing).
+        Rolled-back magazine-claimed pages go back to the *same lane's*
+        magazine, leaving the tree untouched by the failed attempt."""
         runs: List[range] = []
         remaining = need
         while remaining:
             run = min(remaining, self.max_run_pages)
-            r = self._alloc_run(shard, run)
+            r = self._alloc_run(shard, run, mag_lane)
             if r is None:
                 for old in runs:  # roll back partial admission
-                    self._free_run(shard, old)
+                    self._free_run(shard, old, mag_lane)
                 return None
             runs.append(r)
             remaining -= run
@@ -268,14 +376,23 @@ class PagedKVManager:
                 f"n_shards={self.n_shards})"
             )
         home = self.home_shard(seq_id)
-        for attempt in range(self.n_shards):
-            shard = (home + attempt) % self.n_shards
-            runs = self._try_admit_on(shard, need)
-            if runs is not None:
-                self.seqs[seq_id] = SeqAlloc(
-                    seq_id, runs, n_tokens, shard=shard
-                )
-                return True
+        lane = self.mag_lane(seq_id)
+        for spill in range(2):
+            for attempt in range(self.n_shards):
+                shard = (home + attempt) % self.n_shards
+                runs = self._try_admit_on(shard, need, lane)
+                if runs is not None:
+                    self.seqs[seq_id] = SeqAlloc(
+                        seq_id, runs, n_tokens, shard=shard
+                    )
+                    return True
+            # Every probe failed: pages parked in magazines may be the
+            # only free capacity left.  Spill them all back (one burst)
+            # and retry the probe sequence once — the host mirror of
+            # the wavefront's exhaustion spill-back.
+            if spill or not self.magazines or not self.mag_stashed():
+                return False
+            self._mag_spill_all()
         return False
 
     def append_tokens(self, seq_id: int, n_new: int = 1) -> bool:
@@ -286,25 +403,36 @@ class PagedKVManager:
         back (a partially grown sequence would silently leak pages the
         token count never accounts for)."""
         s = self.seqs[seq_id]
+        lane = self.mag_lane(seq_id)
         n_runs_before = len(s.runs)
         s.n_tokens += n_new
         while self.pages_for_tokens(s.n_tokens) > s.n_pages:
             grow = min(self._next_pow2(max(s.n_pages, 1)), self.max_run_pages)
-            r = self._alloc_run(s.shard, grow)
+            r = self._alloc_run(s.shard, grow, lane)
             if r is None:
                 s.n_tokens -= n_new
                 grown = s.runs[n_runs_before:]
                 del s.runs[n_runs_before:]
-                self._free_runs(s.shard, grown)
+                # Roll back to the *same lane's* magazine: a page that
+                # was claimed from this sequence's magazine moments ago
+                # must land back on it, not leak into the shared pool
+                # (which would silently drain the lane's cache and
+                # change the tree state of a failed, no-op call).
+                self._free_runs(s.shard, grown, lane)
                 return False
             s.runs.append(r)
         return True
 
-    def _free_runs(self, shard: int, runs: List[range]) -> None:
-        """Release a burst of runs on one shard: slab pages clear their
-        bitmap bits, the rest go back in one merged buddy burst."""
+    def _free_runs(
+        self, shard: int, runs: List[range], mag_lane: int = -1
+    ) -> None:
+        """Release a burst of runs on one shard: single-page runs stash
+        into the lane's magazine while it has room, slab pages clear
+        their bitmap bits, the rest go back in one merged buddy burst."""
         buddy_addrs: List[int] = []
         for r in runs:
+            if self._maybe_stash(shard, r, mag_lane):
+                continue
             local = r.start - shard * self.pages_per_shard
             if (
                 self.fastpath
@@ -319,9 +447,10 @@ class PagedKVManager:
 
     def free_sequence(self, seq_id: int) -> None:
         """Release a sequence: all of its runs go back in one burst call
-        on its shard (one merged release pass on wavefront-backed pools)."""
+        on its shard (one merged release pass on wavefront-backed pools);
+        single-page runs recycle through the sequence's magazine lane."""
         s = self.seqs.pop(seq_id)
-        self._free_runs(s.shard, s.runs)
+        self._free_runs(s.shard, s.runs, self.mag_lane(seq_id))
 
     def free_sequences(self, seq_ids: List[int]) -> None:
         """Batch eviction: release every run of every sequence, grouped
@@ -333,12 +462,29 @@ class PagedKVManager:
         missing = [i for i in unique if i not in self.seqs]
         if missing:
             raise KeyError(missing[0])
-        per_shard: Dict[int, List[range]] = {}
+        per_shard: Dict[int, List[Tuple[range, int]]] = {}
         for seq_id in unique:
             s = self.seqs.pop(seq_id)
-            per_shard.setdefault(s.shard, []).extend(s.runs)
-        for shard, runs in per_shard.items():
-            self._free_runs(shard, runs)
+            lane = self.mag_lane(seq_id)
+            per_shard.setdefault(s.shard, []).extend(
+                (r, lane) for r in s.runs
+            )
+        for shard, pairs in per_shard.items():
+            buddy_addrs: List[int] = []
+            for r, lane in pairs:
+                if self._maybe_stash(shard, r, lane):
+                    continue
+                local = r.start - shard * self.pages_per_shard
+                if (
+                    self.fastpath
+                    and len(r) == 1
+                    and 0 <= local < self.slab_pages
+                ):
+                    self._slab_free[shard][local] = True
+                else:
+                    buddy_addrs.append(r.start)
+            if buddy_addrs:
+                self.buddies[shard].nb_free_many(buddy_addrs)
 
     # ------------------------------------------------------------------
     def block_table(self, seq_id: int, max_pages: int) -> np.ndarray:
@@ -357,13 +503,25 @@ class PagedKVManager:
 
     # ------------------------------------------------------------------
     def free_pages(self) -> int:
+        """Allocatable pages: slab + tree + magazine-stashed (a stashed
+        page is allocated in the tree's eyes but instantly claimable,
+        so capacity accounting must count it as free)."""
         slab = sum(int(f.sum()) for f in self._slab_free)
-        return slab + sum(b.free_bytes() for b in self.buddies)
+        return (
+            slab
+            + sum(b.free_bytes() for b in self.buddies)
+            + self.mag_stashed()
+        )
+
+    def _mag_stashed_on(self, shard: int) -> int:
+        return sum(len(lane[shard]) for lane in self._mags)
 
     def _largest_run_on(self, shard: int) -> int:
         best = _largest_free_run(self.buddies[shard], self.max_run_pages)
         if self.fastpath and self._slab_free[shard].any():
             best = max(best, 1)  # slab serves single pages only
+        if self._mag_stashed_on(shard):
+            best = max(best, 1)  # magazines serve single pages only
         return best
 
     def fragmentation(self) -> dict:
@@ -379,6 +537,10 @@ class PagedKVManager:
                 n + int(f.sum())
                 for n, f in zip(per_shard_free, self._slab_free)
             ]
+        per_shard_free = [
+            n + self._mag_stashed_on(s)
+            for s, n in enumerate(per_shard_free)
+        ]
         return {
             "free_pages": free,
             "used_pages": self.num_pages - free,
@@ -393,6 +555,10 @@ class PagedKVManager:
             "per_shard_largest_run": per_shard_largest,
             "fastpath_hits": self.fastpath_hits,
             "fastpath_spills": self.fastpath_spills,
+            "magazine_hits": self.magazine_hits,
+            "magazine_spills": self.magazine_spills,
+            "magazine_refills": self.magazine_refills,
+            "magazine_stashed": self.mag_stashed(),
         }
 
     def _occupied_ancestor(self, buddy: NBBSRef, n: int) -> bool:
@@ -470,6 +636,8 @@ class PageOracle:
         max_rounds: int = 64,
         fastpath: bool = False,
         fastpath_slab_level: int = 2,
+        magazines: int = 0,
+        mag_lanes: int = 0,
     ) -> None:
         if num_pages & (num_pages - 1):
             raise ValueError("num_pages must be a power of two")
@@ -517,19 +685,104 @@ class PageOracle:
                 self._slab_free.append(np.ones(slab_pages, bool))
         else:
             self.slab_pages = 0
+        # Magazine mirror (core/magazine.py): per-lane LIFO stacks of
+        # stashed global page ids.  A stashed page stays allocated in
+        # the slab/tree; the stack end is the magazine top, so
+        # list.pop()/append() in lane order reproduce the device
+        # claim/stash rank assignment exactly.
+        if magazines < 0 or mag_lanes < 0:
+            raise ValueError("bad magazine configuration")
+        self.magazines = magazines
+        self.mag: List[List[int]] = [[] for _ in range(mag_lanes)]
+        self.magazine_hits = 0
+        self.magazine_spills = 0
+        self.magazine_refills = 0
 
     def home_shard(self, lane_id: int) -> int:
         return ((lane_id * FIB_HASH) & 0xFFFFFFFF) % self.n_shards
 
-    def alloc_wavefront(self, requests) -> Dict[int, Optional[int]]:
+    def mag_stashed(self) -> int:
+        return sum(len(m) for m in self.mag)
+
+    def _page_owned(self, page: int) -> bool:
+        """The stash-phase ownership predicate: a page may be parked in
+        a magazine only if the pool currently considers it allocated —
+        its slab bit is claimed, or its tree leaf carries OCC (exactly
+        the validity tests `slab_release`/`free_round` would apply)."""
+        s = page // self.pages_per_shard
+        local = page - s * self.pages_per_shard
+        if self.fastpath and local < self.slab_pages:
+            return not bool(self._slab_free[s][local])
+        return bool(self.buddies[s].tree[self.pages_per_shard + local] & OCC)
+
+    def _spill_all_magazines(self) -> int:
+        """Release every stashed page back to the slab/tree, one merged
+        burst per shard (the exhaustion spill-back), and empty the
+        magazines.  Returns the number of pages spilled."""
+        pages = [p for m in self.mag for p in m]
+        for m in self.mag:
+            m.clear()
+        if pages:
+            self.magazine_spills += len(pages)
+            self.free_burst(pages)
+        return len(pages)
+
+    def alloc_wavefront(
+        self, requests, mag_lanes=None
+    ) -> Dict[int, Optional[int]]:
         """Emulate one `pool_wavefront_alloc` over `requests`, a list of
         (key, lane_id) pairs **in device lane order**.  Returns
-        key -> global page id (None = failed after probing S shards)."""
+        key -> global page id (None = failed after probing S shards).
+
+        `mag_lanes` (parallel to `requests`; None or -1 entries opt
+        out) routes each request through a magazine pop first — the
+        device claim phase: pops resolve in lane order before any round
+        runs, cost zero shared-state RMWs, and never count as overflow
+        probes.  If every shard probe fails while magazines still hold
+        pages, the whole stash spills back in one burst and the failed
+        requests retry once from their home shards (the wavefront's
+        exhaustion spill-back)."""
         out: Dict[int, Optional[int]] = {k: None for k, _ in requests}
-        pend = [
-            (k, lid, self.home_shard(lid), 0) for k, lid in requests
-        ]
+        lanes = (
+            list(mag_lanes)
+            if mag_lanes is not None
+            else [-1] * len(requests)
+        )
+        mag_claims = 0
+        pend = []
+        for (k, lid), ml in zip(requests, lanes):
+            if (
+                self.magazines
+                and ml is not None
+                and 0 <= ml < len(self.mag)
+                and self.mag[ml]
+            ):
+                out[k] = self.mag[ml].pop()
+                self.magazine_hits += 1
+                mag_claims += 1
+            else:
+                pend.append((k, lid, self.home_shard(lid), 0))
+        call_hits, failed = self._run_rounds(pend, out)
+        if failed and self.magazines and self.mag_stashed():
+            self._spill_all_magazines()
+            retry = [
+                (k, lid, self.home_shard(lid), 0) for k, lid in failed
+            ]
+            hits2, _ = self._run_rounds(retry, out)
+            call_hits += hits2
+        if self.fastpath:
+            # device spill accounting: every fast-octave request that was
+            # not served by a magazine pop or a slab claim — including
+            # outright failures
+            self.fastpath_spills += len(requests) - mag_claims - call_hits
+        return out
+
+    def _run_rounds(self, pend, out):
+        """The round loop shared by the first pass and the post-spill
+        retry.  Mutates `out` in place; returns (slab call hits, list
+        of (key, lane_id) that failed after probing every shard)."""
         call_hits = 0
+        failed: List[tuple] = []
         for _ in range(self.max_rounds):
             if not pend:
                 break
@@ -549,7 +802,9 @@ class PageOracle:
                             nxt.append(
                                 (k, lid, (sh + 1) % self.n_shards, att + 1)
                             )
-                        continue  # att+1 >= S: probed every shard, fail
+                        else:  # probed every shard: give up
+                            failed.append((k, lid))
+                        continue
                     if self.fastpath:
                         free = np.flatnonzero(self._slab_free[s])
                         if len(free):
@@ -574,21 +829,52 @@ class PageOracle:
                             nxt.append(
                                 (k, lid, (sh + 1) % self.n_shards, att + 1)
                             )
+                        else:
+                            failed.append((k, lid))
             pend = nxt
-        if self.fastpath:
-            # device spill accounting: every fast-octave request that was
-            # not served by a slab claim — including outright failures
-            self.fastpath_spills += len(requests) - call_hits
-        return out
+        return call_hits, failed
 
-    def free_burst(self, pages) -> None:
+    def free_burst(self, pages, stash_lanes=None) -> None:
         """Release global page ids, one merged burst per shard (the
         host mirror of the engine's in-graph `pool_free_round`).  With
         the fastpath on, ids under a shard's slab set their bitmap bit
         instead — a double free of a slab page is a silent no-op, the
-        mirror of `slab_release`'s validity mask."""
+        mirror of `slab_release`'s validity mask.
+
+        `stash_lanes` (parallel to `pages`; None or -1 entries opt out)
+        runs the device stash pre-pass first: the *first* occurrence of
+        a page in the burst may park in its lane's magazine if the pool
+        still owns the page and the magazine has room; every later
+        occurrence of a stashed page is dropped from the burst (the
+        device kills duplicates of stashed pages before the free
+        round), and a full magazine counts a drop-through spill."""
+        pages = list(pages)
+        lanes = (
+            list(stash_lanes)
+            if stash_lanes is not None
+            else [-1] * len(pages)
+        )
         per_shard: Dict[int, List[int]] = {}
-        for p in pages:
+        first_seen: set = set()
+        stashed: set = set()
+        for p, ml in zip(pages, lanes):
+            if p in stashed:
+                continue  # duplicate of a stashed page: killed
+            if (
+                self.magazines
+                and ml is not None
+                and 0 <= ml < len(self.mag)
+                and p not in first_seen
+            ):
+                first_seen.add(p)
+                if self._page_owned(p):
+                    if len(self.mag[ml]) < self.magazines:
+                        self.mag[ml].append(p)
+                        stashed.add(p)
+                        continue
+                    self.magazine_spills += 1
+            else:
+                first_seen.add(p)
             s = p // self.pages_per_shard
             local = p - s * self.pages_per_shard
             if self.fastpath and local < self.slab_pages:
@@ -601,12 +887,19 @@ class PageOracle:
     # -- occupancy ----------------------------------------------------
     def free_pages(self) -> int:
         slab = sum(int(f.sum()) for f in self._slab_free)
-        return slab + sum(b.free_bytes() for b in self.buddies)
+        return (
+            slab
+            + sum(b.free_bytes() for b in self.buddies)
+            + self.mag_stashed()
+        )
 
     def per_shard_free(self) -> List[int]:
         out = [b.free_bytes() for b in self.buddies]
         if self.fastpath:
             out = [n + int(f.sum()) for n, f in zip(out, self._slab_free)]
+        for m in self.mag:
+            for p in m:
+                out[p // self.pages_per_shard] += 1
         return out
 
     def fragmentation(self) -> dict:
@@ -618,6 +911,10 @@ class PageOracle:
                 max(n, 1) if f.any() else n
                 for n, f in zip(per_shard_largest, self._slab_free)
             ]
+        for m in self.mag:
+            for p in m:  # a stashed page is claimable as a 1-run
+                s = p // self.pages_per_shard
+                per_shard_largest[s] = max(per_shard_largest[s], 1)
         free = self.free_pages()
         return {
             "free_pages": free,

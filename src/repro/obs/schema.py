@@ -145,6 +145,26 @@ _SPECS = [
              "slab hits on the host-driven admission path only"),
     _counter("admit_fastpath_spills",
              "slab spills on the host-driven admission path only"),
+    _counter(
+        "magazine_hits",
+        "allocations served by a per-lane magazine pop "
+        "(zero shared-state RMWs)",
+        paper="scalloc span cache / SpeedMalloc local pool",
+    ),
+    _counter(
+        "magazine_spills",
+        "pages returned to the shared pool instead of a magazine "
+        "(stash drop-through on a full magazine, plus exhaustion "
+        "spill-back bursts)",
+    ),
+    _counter(
+        "magazine_refills",
+        "pages pre-claimed from the shared pool into magazines by the "
+        "batched refill burst (one wavefront per refill, not per page)",
+    ),
+    _counter("admit_magazine_spills",
+             "magazine spill-backs on the host-driven admission path "
+             "only (also folded into magazine_spills)"),
     # -- jitted engine per-step metrics --------------------------------
     _counter("alloc_pages", "KV pages claimed in-graph", "pages"),
     _counter("freed_pages", "KV pages released by retirement bursts",
@@ -237,6 +257,10 @@ _SPECS = [
              paper="Fig. 7"),
     _derived("logical_per_alloc", "logical RMWs per allocation",
              paper="Fig. 7"),
+    _derived("rmws_per_op",
+             "shared-state logical RMWs per alloc/free operation "
+             "(alloc + release climbs over total ops; magazine churn "
+             "drives this toward zero)", paper="Fig. 7"),
     _derived("merged_writes_per_alloc",
              "merged words per claimed page", paper="Fig. 7"),
     _derived("merged_reduction",
@@ -288,9 +312,14 @@ WAVEFRONT_STEP_SLOTS: Tuple[str, ...] = (
 )
 
 # pooled grid-over-shards kernel (`pool_wavefront_step_pallas`),
-# one row per shard
+# one row per shard.  The magazine slots are zero in kernel-emitted
+# rows (magazines are per-lane state that lives *outside* the per-shard
+# VMEM row; the `ops.nbbs_pool_wavefront_step` driver fills them in
+# after its claim/stash phases) but they are part of the row so the
+# producer and every consumer share one slot order.
 POOL_STEP_SLOTS: Tuple[str, ...] = WAVEFRONT_STEP_SLOTS + (
-    "fastpath_hits",
+    "fastpath_hits", "magazine_hits", "magazine_spills",
+    "magazine_refills",
 )
 
 for _slots in (WAVEFRONT_ALLOC_SLOTS, WAVEFRONT_STEP_SLOTS,
@@ -339,6 +368,9 @@ ENGINE_METRICS: Tuple[str, ...] = (
     "largest_run",
     "fastpath_hits",
     "fastpath_spills",
+    "magazine_hits",
+    "magazine_spills",
+    "magazine_refills",
     "free_pages_shard",
     "alloc_rounds_hist",
     "probe_distance_hist",

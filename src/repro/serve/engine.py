@@ -55,6 +55,9 @@ class ServeEngine:
         log_stats: bool = False,
         fastpath: bool = False,
         fastpath_slab_level: int = 2,
+        magazines: int = 0,
+        magazine_refill: int = 0,
+        mag_lanes: Optional[int] = None,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
             "paged engine covers attention families; SSM/hybrid use "
@@ -76,6 +79,10 @@ class ServeEngine:
         # `fastpath` carves the O(1) bitmap-slab front end out of each
         # shard (core/fastpath.py): single-page runs — decode growth —
         # claim slab slots and spill into the buddy climb when full.
+        # `magazines` puts a per-lane LIFO of recycled single pages in
+        # front of both (core/magazine.py): freed decode pages park in
+        # the retiring sequence group's magazine and the next growth in
+        # that group pops them back with zero allocator work.
         self.kv = PagedKVManager(
             num_pages,
             page_tokens,
@@ -83,6 +90,9 @@ class ServeEngine:
             layout=layout,
             fastpath=fastpath,
             fastpath_slab_level=fastpath_slab_level,
+            magazines=magazines,
+            magazine_refill=magazine_refill,
+            mag_lanes=mag_lanes if mag_lanes is not None else max_batch,
         )
         self.pool = init_pool(cfg, num_pages, page_tokens, dtype)
         # width of the per-sequence block tables handed to the kernel;

@@ -74,12 +74,20 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
 from repro.core.fastpath import FastPathConfig
-from repro.core.nbbs_jax import nb_pool_alloc_pages, nb_pool_free_pages
+from repro.core.magazine import MagazineConfig, MagazineState, mag_total
+from repro.core.nbbs_jax import (
+    nb_pool_alloc_pages,
+    nb_pool_alloc_pages_mag,
+    nb_pool_free_pages,
+    nb_pool_free_pages_mag,
+)
 from repro.core.pool import (
     PoolConfig,
     home_shard,
     pool_free_units,
+    pool_init_magazines,
     pool_largest_run,
+    pool_mag_free_per_shard,
 )
 from repro.obs import metrics as om
 from repro.obs import ring as oring
@@ -119,6 +127,12 @@ class EngineConfig:
     # before the buddy climb on every decode-boundary alloc
     fastpath: bool = False
     fastpath_slab_level: int = 2
+    # per-lane magazine capacity (core/magazine.py): every engine lane
+    # keeps a LIFO of its own retired pages and recycles them with zero
+    # shared-state RMWs; 0 disables magazines entirely (no state, no
+    # graph ops)
+    magazines: int = 0
+    magazine_refill: int = 0
     # in-graph event ring capacity (obs/ring.py); 0 disables the ring
     # (pushes become no-op scatters, so telemetry-off pays nothing)
     ring_capacity: int = 0
@@ -134,8 +148,10 @@ class EngineConfig:
             raise ValueError("num_pages must divide evenly across shards")
         if self.layout not in ("unpacked", "bunch-packed"):
             raise ValueError(f"unknown tree layout {self.layout!r}")
-        if self.fastpath:
-            self.pool_config()  # fail fast on bad slab geometry
+        if self.magazines < 0 or self.magazine_refill < 0:
+            raise ValueError("magazines/magazine_refill must be >= 0")
+        if self.fastpath or self.magazines:
+            self.pool_config()  # fail fast on bad slab/magazine geometry
 
     @property
     def pages_per_shard(self) -> int:
@@ -153,10 +169,18 @@ class EngineConfig:
             if self.fastpath
             else None
         )
+        mcfg = (
+            MagazineConfig(
+                mag_cap=self.magazines, refill_batch=self.magazine_refill
+            )
+            if self.magazines
+            else None
+        )
         return PoolConfig(
             TreeConfig(depth=depth, max_level=0, layout=layout),
             self.n_shards,
             fastpath=fp,
+            magazines=mcfg,
         )
 
     def lane_capacity_tokens(self) -> int:
@@ -183,6 +207,12 @@ class EngineState(NamedTuple):
     done_step: Array   # int32[B]      step index of retirement, -1 live
     step_no: Array     # int32 scalar  global step counter
     ring: oring.EventRing  # in-graph event ring (cap 0 = disabled)
+    mag_pages: Array   # int32[B, mag_cap] per-lane magazine (gid, -1=empty)
+    mag_depth: Array   # int32[B]          magazine fill depth
+
+
+def _engine_mags(ecfg: EngineConfig, state: EngineState) -> MagazineState:
+    return MagazineState(pages=state.mag_pages, depth=state.mag_depth)
 
 
 def _zero_metrics(ecfg: EngineConfig) -> Metrics:
@@ -219,7 +249,21 @@ def init_engine_state(ecfg: EngineConfig) -> EngineState:
         done_step=jnp.full((B,), -1, jnp.int32),
         step_no=jnp.int32(0),
         ring=oring.make_ring(ecfg.ring_capacity),
+        **_init_mag_fields(ecfg),
     )
+
+
+def _init_mag_fields(ecfg: EngineConfig) -> dict:
+    """Fresh magazine arrays: one lane per engine lane when magazines
+    are on; zero-width placeholders (no memory, no graph ops) when off."""
+    B = ecfg.max_batch
+    if ecfg.magazines:
+        mags = pool_init_magazines(ecfg.pool_config(), B)
+        return {"mag_pages": mags.pages, "mag_depth": mags.depth}
+    return {
+        "mag_pages": jnp.zeros((B, 0), jnp.int32),
+        "mag_depth": jnp.zeros((B,), jnp.int32),
+    }
 
 
 def global_tables(ecfg: EngineConfig, page_shard: Array, page_off: Array) -> Array:
@@ -251,9 +295,23 @@ def _engine_step_impl(
     with jax.named_scope("nbbs_alloc"):
         need = state.active & (state.ctx == state.n_pages * pt)
         need = need & (state.n_pages < MP)  # lane table full = overflow
-        trees, a_shard, a_off, ok, astats = nb_pool_alloc_pages(
-            pcfg, state.trees, need, state.seq_id, ecfg.max_rounds
-        )
+        if ecfg.magazines:
+            # magazine-first claim: a lane that stashed a page at a
+            # previous retirement pops it back with zero shared-state
+            # RMWs; misses fall through into the same round's
+            # fastpath-then-tree wavefront.  Every engine lane owns its
+            # own magazine, so the claim rank is identically zero — no
+            # group-rank sort in the compiled step
+            trees, mags, a_shard, a_off, ok, astats = nb_pool_alloc_pages_mag(
+                pcfg, state.trees, _engine_mags(ecfg, state), need,
+                state.seq_id, ecfg.max_rounds, mag_lane=bidx,
+                mag_rank=jnp.zeros(B, jnp.int32),
+            )
+        else:
+            mags = _engine_mags(ecfg, state)
+            trees, a_shard, a_off, ok, astats = nb_pool_alloc_pages(
+                pcfg, state.trees, need, state.seq_id, ecfg.max_rounds
+            )
         pos = jnp.clip(state.n_pages, 0, MP - 1)
         page_shard = state.page_shard.at[bidx, pos].set(
             jnp.where(ok, a_shard, state.page_shard[bidx, pos])
@@ -295,10 +353,28 @@ def _engine_step_impl(
         retire = finished | overflow_now
 
         f_active = (retire[:, None] & (page_shard >= 0)).reshape(-1)
-        trees, freed, fstats = nb_pool_free_pages(
-            pcfg, trees,
-            page_shard.reshape(-1), page_off.reshape(-1), f_active,
-        )
+        if ecfg.magazines:
+            # retired lanes stash their pages into their own magazine
+            # first (up to mag_cap); the overflow falls through into
+            # the same merged free burst.  Block tables fill prefix-
+            # wise with distinct pages the lane allocated, so the
+            # stash rank is the column index and the handles are
+            # known-owned — both stash-phase fast paths apply
+            # (no B*MP-wide sort, no [S, B*MP] occupancy re-derivation)
+            f_lane = jnp.broadcast_to(bidx[:, None], (B, MP)).reshape(-1)
+            f_rank = jnp.broadcast_to(
+                jnp.arange(MP, dtype=jnp.int32)[None, :], (B, MP)
+            ).reshape(-1)
+            trees, mags, freed, fstats = nb_pool_free_pages_mag(
+                pcfg, trees, mags,
+                page_shard.reshape(-1), page_off.reshape(-1), f_active,
+                mag_lane=f_lane, mag_rank=f_rank, assume_owned=True,
+            )
+        else:
+            trees, freed, fstats = nb_pool_free_pages(
+                pcfg, trees,
+                page_shard.reshape(-1), page_off.reshape(-1), f_active,
+            )
         page_shard = jnp.where(retire[:, None], -1, page_shard)
         page_off = jnp.where(retire[:, None], -1, page_off)
         n_pages = jnp.where(retire, 0, n_pages)
@@ -311,6 +387,10 @@ def _engine_step_impl(
     # -- 5. telemetry: named metrics + one ring event per live step ---
     with jax.named_scope("telemetry"):
         fp_shard = pool_free_units(pcfg, trees)  # int32[S], one scan
+        if ecfg.magazines:
+            # stashed pages are allocated in the tree's eyes but
+            # instantly claimable: capacity gauges must count them
+            fp_shard = fp_shard + pool_mag_free_per_shard(pcfg, mags)
         free_total = fp_shard.sum(dtype=jnp.int32)
         won = ok.sum(dtype=jnp.int32)
         freed_n = freed.sum(dtype=jnp.int32)
@@ -343,7 +423,16 @@ def _engine_step_impl(
         m["free_logical_rmws"] = fstats["free_logical_rmws"]
         m["free_pages"] = free_total
         m["free_pages_shard"] = fp_shard
-        m["largest_run"] = pool_largest_run(pcfg, trees)
+        run = pool_largest_run(pcfg, trees)
+        if ecfg.magazines:
+            # a non-empty magazine can always serve a 1-run
+            run = jnp.where(mag_total(mags) > 0, jnp.maximum(run, 1), run)
+            m["magazine_hits"] = astats["magazine_hits"]
+            m["magazine_spills"] = (
+                astats["magazine_spills"] + fstats["magazine_spills"]
+            )
+            m["magazine_refills"] = astats["magazine_refills"]
+        m["largest_run"] = run
         m["fastpath_hits"] = astats["fastpath_hits"]
         m["fastpath_spills"] = astats["fastpath_spills"]
         # ring counters as per-step deltas (merge sums them back up)
@@ -363,7 +452,7 @@ def _engine_step_impl(
         last_tok=last_tok, out_toks=out_toks, n_out=n_out,
         max_new=state.max_new, active=active, overflowed=overflowed,
         done_step=done_step, step_no=state.step_no + 1,
-        ring=ring,
+        ring=ring, mag_pages=mags.pages, mag_depth=mags.depth,
     )
     return new_state, m
 
@@ -399,24 +488,47 @@ def engine_run(
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def admit_pages(
-    ecfg: EngineConfig, trees: Array, seq_id: Array, need: Array
-) -> Tuple[Array, Array, Array, Array, Array]:
+    ecfg: EngineConfig,
+    trees: Array,
+    mag_pages: Array,
+    mag_depth: Array,
+    seq_id: Array,
+    need: Array,
+) -> Tuple[Array, ...]:
     """All-or-nothing in-graph claim of `need` prompt pages for one
     sequence: every page is a leaf-unit wavefront lane homed by the
     sequence id; on partial failure the successes are rolled back by
     the same merged free pass, so a failed admission leaves the pool
-    bit-identical.  Returns (trees, shards[MP], offs[MP], admitted,
-    probe_overflows, fastpath_hits, fastpath_spills) — the fastpath
-    counters include rolled-back claims, matching the oracle's
-    accounting."""
+    bit-identical.  Returns (trees, mag_pages, mag_depth, shards[MP],
+    offs[MP], admitted, probe_overflows, fastpath_hits,
+    fastpath_spills, magazine_spills) — the fastpath counters include
+    rolled-back claims, matching the oracle's accounting.
+
+    Admission is *magazine-oblivious* on the claim side (a prompt's
+    pages are not any lane's recycled working set), but the exhaustion
+    spill-back still applies: when every probe fails and magazines
+    hold pages, the whole stash spills back in one burst and the
+    failed pages retry — so a full-looking pool whose capacity is
+    parked in magazines still admits.  A spill mutates trees and
+    magazines even when the admission ultimately fails; callers must
+    persist both unconditionally."""
     pcfg = ecfg.pool_config()
     MP = ecfg.max_lane_pages
     lanes = jnp.arange(MP)
     active = lanes < need
     lane_ids = jnp.full((MP,), seq_id, jnp.int32)
-    trees1, shard, off, ok, stats = nb_pool_alloc_pages(
-        pcfg, trees, active, lane_ids, ecfg.max_rounds
-    )
+    mag_spills = jnp.int32(0)
+    if ecfg.magazines:
+        mags = MagazineState(pages=mag_pages, depth=mag_depth)
+        trees1, mags, shard, off, ok, stats = nb_pool_alloc_pages_mag(
+            pcfg, trees, mags, active, lane_ids, ecfg.max_rounds
+        )
+        mag_pages, mag_depth = mags.pages, mags.depth
+        mag_spills = stats["magazine_spills"]
+    else:
+        trees1, shard, off, ok, stats = nb_pool_alloc_pages(
+            pcfg, trees, active, lane_ids, ecfg.max_rounds
+        )
     admitted = ok.sum(dtype=jnp.int32) == need
     trees_rb, _, _ = nb_pool_free_pages(
         pcfg, trees1, shard, off, ok & jnp.logical_not(admitted)
@@ -425,12 +537,15 @@ def admit_pages(
     keep = admitted & ok
     return (
         trees_out,
+        mag_pages,
+        mag_depth,
         jnp.where(keep, shard, -1),
         jnp.where(keep, off, -1),
         admitted,
         stats["overflows"],
         stats["fastpath_hits"],
         stats["fastpath_spills"],
+        mag_spills,
     )
 
 
@@ -538,6 +653,8 @@ class JitServeEngine:
         max_rounds: int = 64,
         fastpath: bool = False,
         fastpath_slab_level: int = 2,
+        magazines: int = 0,
+        magazine_refill: int = 0,
         ring_capacity: int = 0,
     ) -> None:
         assert cfg.family in ("dense", "moe", "vlm", "audio"), (
@@ -560,6 +677,8 @@ class JitServeEngine:
             max_rounds=max_rounds,
             fastpath=fastpath,
             fastpath_slab_level=fastpath_slab_level,
+            magazines=magazines,
+            magazine_refill=magazine_refill,
             ring_capacity=ring_capacity,
         )
         self.cfg = cfg
@@ -580,6 +699,9 @@ class JitServeEngine:
             # the device-side metric accumulator; `stat_totals` folds
             # both through one schema-aware merge)
             "admit_fastpath_hits": 0, "admit_fastpath_spills": 0,
+            # admission-path magazine spill-backs (the decode-path
+            # magazine counters live in the device accumulator)
+            "admit_magazine_spills": 0,
         }
         self.acc = _zero_metrics(self.ecfg)  # device-side totals
         # host-phase span log for the trace exporter: wall-clock
@@ -631,18 +753,29 @@ class JitServeEngine:
                 self.stats["rejected"] += 1
                 continue
             need = self._pages_for(len(req.prompt) - 1)
-            trees, shards, offs, admitted, _, fp_h, fp_s = admit_pages(
+            (
+                trees, mag_pages, mag_depth, shards, offs, admitted,
+                _, fp_h, fp_s, mag_sp,
+            ) = admit_pages(
                 self.ecfg, self.state.trees,
+                self.state.mag_pages, self.state.mag_depth,
                 jnp.int32(req.req_id), jnp.int32(need),
+            )
+            # persist trees+magazines even on failure: an exhaustion
+            # spill-back moves pages from magazines into the tree
+            # whether or not the admission ultimately fits
+            self.state = self.state._replace(
+                trees=trees, mag_pages=mag_pages, mag_depth=mag_depth
             )
             if self.ecfg.fastpath:  # admission already syncs on `admitted`
                 self.stats["admit_fastpath_hits"] += int(fp_h)
                 self.stats["admit_fastpath_spills"] += int(fp_s)
+            if self.ecfg.magazines:
+                self.stats["admit_magazine_spills"] += int(mag_sp)
             if not bool(admitted):
                 self.stats["queued_full"] += 1
                 break  # pool full: natural admission control
             self.waiting.pop(0)
-            self.state = self.state._replace(trees=trees)
             self._insert(free.pop(0), req, shards, offs, need)
             self.stats["admitted"] += 1
         n_adm = self.stats["admitted"] - admitted0
@@ -775,6 +908,8 @@ class JitServeEngine:
             "admit_fastpath_spills": self.stats["admit_fastpath_spills"],
             "fastpath_hits": self.stats["admit_fastpath_hits"],
             "fastpath_spills": self.stats["admit_fastpath_spills"],
+            "admit_magazine_spills": self.stats["admit_magazine_spills"],
+            "magazine_spills": self.stats["admit_magazine_spills"],
         })
         # pad both sides to the union key set (merge refuses drift);
         # device values ride the "new" side so gauges keep theirs
@@ -801,6 +936,7 @@ class JitServeEngine:
                 "n_shards": ecfg.n_shards,
                 "layout": ecfg.layout,
                 "fastpath": ecfg.fastpath,
+                "magazines": ecfg.magazines,
                 "ring_capacity": ecfg.ring_capacity,
             },
             "metrics": self.stat_totals(),
@@ -809,9 +945,12 @@ class JitServeEngine:
         }
 
     def device_free_pages(self) -> int:
-        return int(
+        free = int(
             pool_free_units(self.ecfg.pool_config(), self.state.trees).sum()
         )
+        if self.ecfg.magazines:  # stashed pages are instantly claimable
+            free += int(self.state.mag_depth.sum())
+        return free
 
     def device_block_table(self, seq_id: int) -> np.ndarray:
         """Global-page-id table of one running sequence (debug/test

@@ -66,6 +66,7 @@ class HostOracleEngine:
         max_rounds: int = 64,
         fastpath: bool = False,
         fastpath_slab_level: int = 2,
+        magazines: int = 0,
     ) -> None:
         if max_lane_pages is None:
             max_lane_pages = min(num_pages, 128)
@@ -74,6 +75,9 @@ class HostOracleEngine:
         self.max_lane_pages = max_lane_pages
         self.max_out = max_out
         self.num_pages = num_pages
+        self.magazines = magazines
+        # one magazine per engine lane, exactly the jitted engine's
+        # `mag_lane = lane index` wiring
         self.pool = PageOracle(
             num_pages,
             page_tokens,
@@ -81,6 +85,8 @@ class HostOracleEngine:
             max_rounds=max_rounds,
             fastpath=fastpath,
             fastpath_slab_level=fastpath_slab_level,
+            magazines=magazines,
+            mag_lanes=max_batch if magazines else 0,
         )
         self.lanes = [_Lane() for _ in range(max_batch)]
         self.waiting: List[Request] = []
@@ -94,6 +100,7 @@ class HostOracleEngine:
             "admitted": 0, "queued_full": 0, "rejected": 0,
             "steps": 0, "overflow_retired": 0,
             "admit_fastpath_hits": 0, "admit_fastpath_spills": 0,
+            "admit_magazine_spills": 0,
         }
 
     # -- admission (mirrors JitServeEngine line for line) -------------
@@ -128,12 +135,19 @@ class HostOracleEngine:
             # all-or-nothing wavefront claim, homed by the sequence id
             # (`admit_pages`: one wavefront lane per prompt page)
             h0, s0 = self.pool.fastpath_hits, self.pool.fastpath_spills
+            m0 = self.pool.magazine_spills
+            # magazine-oblivious claims (no mag_lanes): admission pages
+            # are nobody's recycled working set, but the exhaustion
+            # spill-back inside the wavefront still applies
             got = self.pool.alloc_wavefront(
                 [(k, req.req_id) for k in range(need)]
             )
             self.stats["admit_fastpath_hits"] += self.pool.fastpath_hits - h0
             self.stats["admit_fastpath_spills"] += (
                 self.pool.fastpath_spills - s0
+            )
+            self.stats["admit_magazine_spills"] += (
+                self.pool.magazine_spills - m0
             )
             pages = [got[k] for k in range(need)]
             if any(p is None for p in pages):
@@ -168,7 +182,11 @@ class HostOracleEngine:
             (i, ln.seq_id) for i, ln in enumerate(self.lanes)
             if ln.active and ln.ctx == len(ln.pages) * pt and len(ln.pages) < MP
         ]
-        got = self.pool.alloc_wavefront(needers)
+        # decode growth claims each lane's own magazine first (the
+        # engine's `mag_lane = arange(B)` wiring)
+        got = self.pool.alloc_wavefront(
+            needers, mag_lanes=[i for i, _ in needers]
+        )
         overflow = set()
         for i, _ in needers:
             page = got[i]
@@ -192,15 +210,19 @@ class HostOracleEngine:
             ln.n_out += 1
             if ln.n_out >= ln.max_new:
                 retired.append(i)
-        # 3. burst free of every retired lane's pages
+        # 3. burst free of every retired lane's pages; each page stashes
+        #    into its own lane's magazine first (the engine's broadcast
+        #    `mag_lane` over the retirement burst)
         freed: List[int] = []
+        stash_lanes: List[int] = []
         for i in retired:
             ln = self.lanes[i]
             freed.extend(ln.pages)
+            stash_lanes.extend([i] * len(ln.pages))
             ln.pages = []
             ln.active = False
             ln.done_step = self.step_no
-        self.pool.free_burst(freed)
+        self.pool.free_burst(freed, stash_lanes=stash_lanes)
         self.step_no += 1
 
     def _drain(self) -> List[int]:
@@ -267,6 +289,9 @@ class HostOracleEngine:
         out = dict(self.stats)
         out["fastpath_hits"] = self.pool.fastpath_hits
         out["fastpath_spills"] = self.pool.fastpath_spills
+        out["magazine_hits"] = self.pool.magazine_hits
+        out["magazine_spills"] = self.pool.magazine_spills
+        out["magazine_refills"] = self.pool.magazine_refills
         for name in out:
             spec(name)  # raises on unregistered metric names
         return out

@@ -1,0 +1,801 @@
+"""Magazine battery: per-lane page caches over the sharded pool
+(core/magazine.py + the fused paths in core/pool.py).
+
+Differential contract: a magazines-on pool must be capacity- and
+failure-equivalent to a magazines-off pool on everything a caller can
+observe — per-lane success/failure on capacity-sufficient traces,
+winner *count* under exhaustion (the exhaustion spill-back may reshuffle
+which lanes win, a documented benign divergence, docs/design.md §10),
+total pages outstanding, and drain-to-empty — while serving recycled
+pages through a pop that costs zero shared-state RMWs.
+
+Runs as its own CI matrix cell (`-m magazine`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import magazine as magmod
+from repro.core.concurrent import BUNCH_PACKED, TreeConfig, UNPACKED
+from repro.core.fastpath import FastPathConfig
+from repro.core.magazine import MagazineConfig, init_magazines, mag_total
+from repro.core.pool import (
+    PoolConfig,
+    pool_free_units,
+    pool_init_magazines,
+    pool_mag_free_per_shard,
+    pool_magazine_drain,
+    pool_magazine_refill,
+    pool_wavefront_alloc,
+    pool_wavefront_alloc_mag,
+    pool_wavefront_free_mag,
+)
+
+pytestmark = pytest.mark.magazine
+
+LAYOUTS = [("unpacked", UNPACKED), ("bunch-packed", BUNCH_PACKED)]
+SHARDS = [1, 4]
+FASTPATHS = [False, True]
+GRID = [
+    pytest.param(name, layout, S, fp, id=f"{name}-S{S}-fp{int(fp)}")
+    for name, layout in LAYOUTS
+    for S in SHARDS
+    for fp in FASTPATHS
+]
+
+
+def _pair(depth, S, layout, fastpath, mag_cap=4, refill=0):
+    """(magazines-on pool, magazines-off pool), identical geometry."""
+    tree = TreeConfig(depth=depth, layout=layout)
+    fp = FastPathConfig(level=None, slab_level=1) if fastpath else None
+    on = PoolConfig(
+        tree, S, fastpath=fp,
+        magazines=MagazineConfig(mag_cap=mag_cap, refill_batch=refill),
+    )
+    off = PoolConfig(tree, S, fastpath=fp)
+    return on, off
+
+
+def _leaf_alloc_mag(pcfg, trees, mags, active, lane_ids, mag_lane):
+    K = len(active)
+    levels = jnp.full((K,), pcfg.tree.depth, jnp.int32)
+    return pool_wavefront_alloc_mag(
+        pcfg, trees, mags, levels,
+        jnp.asarray(active, bool), 64,
+        jnp.asarray(lane_ids, jnp.int32),
+        jnp.asarray(mag_lane, jnp.int32),
+    )
+
+
+def _leaf_alloc(pcfg, trees, active, lane_ids):
+    K = len(active)
+    levels = jnp.full((K,), pcfg.tree.depth, jnp.int32)
+    return pool_wavefront_alloc(
+        pcfg, trees, levels, jnp.asarray(active, bool), 64,
+        jnp.asarray(lane_ids, jnp.int32),
+    )
+
+
+class TestMagazineConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            MagazineConfig(mag_cap=0).validate()
+        with pytest.raises(ValueError):
+            MagazineConfig(mag_cap=4, refill_batch=-1).validate()
+        with pytest.raises(ValueError):
+            PoolConfig(
+                TreeConfig(depth=3), 1,
+                magazines=MagazineConfig(mag_cap=-2),
+            )
+        # well-formed config threads through PoolConfig
+        pcfg = PoolConfig(
+            TreeConfig(depth=3), 2, magazines=MagazineConfig(mag_cap=4)
+        )
+        assert pcfg.magazines.mag_cap == 4
+
+    def test_init_shapes(self):
+        mcfg = MagazineConfig(mag_cap=3)
+        mags = init_magazines(mcfg, 5)
+        assert mags.pages.shape == (5, 3)
+        assert mags.depth.shape == (5,)
+        assert int(mag_total(mags)) == 0
+        assert bool((mags.pages == -1).all())
+
+
+class TestClaimStashUnits:
+    """Pure MagazineState semantics, no pool attached."""
+
+    def test_lifo_order_and_rank(self):
+        mcfg = MagazineConfig(mag_cap=4)
+        mags = init_magazines(mcfg, 2)
+        # two lanes stash two pages each, in lane order
+        pages = jnp.asarray([10, 11, 20, 21], jnp.int32)
+        want = jnp.ones(4, bool)
+        lane = jnp.asarray([0, 0, 1, 1], jnp.int32)
+        mags, stashed = magmod.mag_stash(mcfg, mags, pages, want, lane)
+        assert bool(stashed.all())
+        assert mags.depth.tolist() == [2, 2]
+        assert mags.pages[0, :2].tolist() == [10, 11]
+        # pop order is LIFO top-down in lane order: lane 0 twice pops
+        # 11 then 10; lane 1 pops 21
+        mags, got_pages, got, hits = magmod.mag_claim(
+            mcfg, mags, jnp.ones(3, bool),
+            jnp.asarray([0, 0, 1], jnp.int32),
+        )
+        assert int(hits) == 3
+        assert got_pages.tolist() == [11, 10, 21]
+        assert mags.depth.tolist() == [0, 1]
+        assert int(mags.pages[1, 0]) == 20
+
+    def test_stash_drop_through_when_full(self):
+        mcfg = MagazineConfig(mag_cap=2)
+        mags = init_magazines(mcfg, 1)
+        pages = jnp.asarray([1, 2, 3], jnp.int32)
+        mags, stashed = magmod.mag_stash(
+            mcfg, mags, pages, jnp.ones(3, bool), jnp.zeros(3, jnp.int32)
+        )
+        assert stashed.tolist() == [True, True, False]
+        assert int(mags.depth[0]) == 2
+
+    def test_claim_underflow_misses(self):
+        mcfg = MagazineConfig(mag_cap=4)
+        mags = init_magazines(mcfg, 1)
+        mags, _ = magmod.mag_stash(
+            mcfg, mags, jnp.asarray([7], jnp.int32),
+            jnp.ones(1, bool), jnp.zeros(1, jnp.int32),
+        )
+        mags, pages, got, hits = magmod.mag_claim(
+            mcfg, mags, jnp.ones(3, bool), jnp.zeros(3, jnp.int32)
+        )
+        assert got.tolist() == [True, False, False]
+        assert int(hits) == 1
+
+    def test_group_rank(self):
+        keys = jnp.asarray([2, 0, 2, 1, 2], jnp.int32)
+        cand = jnp.asarray([1, 1, 1, 0, 1], bool)
+        rank = magmod.group_rank(keys, cand, 3)
+        # within each group, candidates rank in lane order; non-cands 0
+        assert rank.tolist() == [0, 0, 1, 0, 2]
+
+    def test_precomputed_rank_matches_group_rank(self):
+        # the jit-engine fast paths: a caller whose structure makes the
+        # rank trivial may pass it and skip the stable sort — results
+        # must be bit-identical to the group_rank path
+        mcfg = MagazineConfig(mag_cap=4)
+        B, MP = 8, 4
+        mags = init_magazines(mcfg, B)
+        lane = jnp.repeat(jnp.arange(B, dtype=jnp.int32), MP)
+        pages = jnp.arange(B * MP, dtype=jnp.int32)
+        cand = (jnp.arange(B * MP) % MP) < 2  # prefix-wise rows
+        rank = jnp.tile(jnp.arange(MP, dtype=jnp.int32), B)
+        m1, s1 = magmod.mag_stash(mcfg, mags, pages, cand, lane)
+        m2, s2 = magmod.mag_stash(
+            mcfg, mags, pages, cand, lane, rank=rank
+        )
+        assert (s1 == s2).all()
+        assert (m1.pages == m2.pages).all()
+        assert (m1.depth == m2.depth).all()
+        # distinct mag_lane per claimant => rank identically zero
+        want = jnp.ones(B, bool)
+        ml = jnp.arange(B, dtype=jnp.int32)
+        a1 = magmod.mag_claim(mcfg, m1, want, ml)
+        a2 = magmod.mag_claim(
+            mcfg, m1, want, ml, rank=jnp.zeros(B, jnp.int32)
+        )
+        for x, y in zip(
+            jax.tree_util.tree_leaves(a1), jax.tree_util.tree_leaves(a2)
+        ):
+            assert (np.asarray(x) == np.asarray(y)).all()
+
+    def test_assume_owned_free_matches_generic(self):
+        # assume_owned skips the ownership/dedup guards; on a burst
+        # that actually satisfies the contract (distinct owned leaves)
+        # the release must be bit-identical, fast paths and all
+        mcfg = MagazineConfig(mag_cap=4)
+        pcfg = PoolConfig(
+            tree=TreeConfig(depth=4), n_shards=2, magazines=mcfg
+        )
+        trees = pcfg.empty_trees()
+        L, K = 4, 8
+        mags = pool_init_magazines(pcfg, L)
+        levels = jnp.full(K, 4, jnp.int32)
+        active = jnp.ones(K, bool)
+        mag_lane = jnp.arange(K, dtype=jnp.int32) % L
+        trees, mags, nodes, shard, ok, _ = pool_wavefront_alloc_mag(
+            pcfg, trees, mags, levels, active, 64, None, mag_lane
+        )
+        assert bool(ok.all())
+        rank = magmod.group_rank(mag_lane, active, L)
+        o1 = pool_wavefront_free_mag(
+            pcfg, trees, mags, nodes, shard, active, mag_lane
+        )
+        o2 = pool_wavefront_free_mag(
+            pcfg, trees, mags, nodes, shard, active, mag_lane,
+            rank, True,
+        )
+        for x, y in zip(
+            jax.tree_util.tree_leaves(o1), jax.tree_util.tree_leaves(o2)
+        ):
+            assert (np.asarray(x) == np.asarray(y)).all()
+
+
+class TestMagazineDifferential:
+    """Magazines-on vs magazines-off pools on shared traces."""
+
+    @pytest.mark.parametrize("name,layout,S,fp", GRID)
+    def test_churn_recycles_with_zero_rmws(self, name, layout, S, fp):
+        """alloc -> stash-free -> realloc: the second wave is served
+        entirely by magazine pops (zero logical RMWs), conservation
+        holds throughout, and draining restores the off baseline."""
+        depth = 5
+        on, off = _pair(depth, S, layout, fp)
+        total = int(pool_free_units(off, off.empty_trees()).sum())
+        K = 8
+        lanes = list(range(K))
+        mag_lane = [i // 2 for i in range(K)]  # 2 pages per magazine
+
+        mags = pool_init_magazines(on, K // 2)
+        trees = on.empty_trees()
+        trees, mags, nodes, shard, ok, st = _leaf_alloc_mag(
+            on, trees, mags, [True] * K, lanes, mag_lane
+        )
+        assert bool(ok.all())
+        assert int(st["magazine_hits"]) == 0  # nothing stashed yet
+
+        trees, mags, freed, fst = pool_wavefront_free_mag(
+            on, trees, mags, nodes, shard, ok,
+            jnp.asarray(mag_lane, jnp.int32),
+        )
+        assert bool(freed.all())
+        assert int(mag_total(mags)) == K  # all parked, none spilled
+        assert int(fst["magazine_spills"]) == 0
+        # conservation: stashed pages count as free capacity
+        assert (
+            int(pool_free_units(on, trees).sum()) + int(mag_total(mags))
+            == total
+        )
+        assert (
+            pool_mag_free_per_shard(on, mags).sum() == mag_total(mags)
+        )
+
+        trees, mags, nodes2, shard2, ok2, st2 = _leaf_alloc_mag(
+            on, trees, mags, [True] * K, lanes, mag_lane
+        )
+        assert bool(ok2.all())
+        assert int(st2["magazine_hits"]) == K
+        assert int(st2["logical_rmws"]) == 0  # zero shared-state RMWs
+        assert int(st2["overflows"]) == 0  # pops are not probe misses
+        assert int(mag_total(mags)) == 0
+
+        # drain-to-empty equals the magazines-off baseline exactly
+        trees, mags, freed, _ = pool_wavefront_free_mag(
+            on, trees, mags, nodes2, shard2, ok2,
+            jnp.asarray(mag_lane, jnp.int32),
+        )
+        trees, mags, _ = pool_magazine_drain(on, trees, mags)
+        assert int(mag_total(mags)) == 0
+        assert int(pool_free_units(on, trees).sum()) == total
+        off_units = pool_free_units(off, off.empty_trees())
+        assert pool_free_units(on, trees).tolist() == off_units.tolist()
+
+    @pytest.mark.parametrize("name,layout,S,fp", GRID)
+    def test_capacity_equivalence_on_and_off(self, name, layout, S, fp):
+        """Same churn trace on both pools: identical per-wave success
+        masks while capacity suffices, identical winner counts under
+        exhaustion, identical outstanding-page totals every wave."""
+        depth = 4
+        on, off = _pair(depth, S, layout, fp)
+        total = int(pool_free_units(off, off.empty_trees()).sum())
+        rng = np.random.default_rng(42 + S)
+        K = 8
+        t_on, m_on = on.empty_trees(), pool_init_magazines(on, K)
+        t_off = off.empty_trees()
+        held_on, held_off = [], []  # (nodes, shard, ok) per wave
+        for wave in range(6):
+            lanes = rng.integers(0, 64, K).tolist()
+            mag_lane = list(range(K))
+            t_on, m_on, n1, s1, ok1, _ = _leaf_alloc_mag(
+                on, t_on, m_on, [True] * K, lanes, mag_lane
+            )
+            t_off, n2, s2, ok2, _ = _leaf_alloc(
+                off, t_off, [True] * K, lanes
+            )
+            # failure equivalence: identical number served (the winner
+            # *set* may differ once the spill-back reshuffles lanes)
+            assert int(ok1.sum()) == int(ok2.sum()), wave
+            held_on.append((n1, s1, ok1))
+            held_off.append((n2, s2, ok2))
+            # equal outstanding capacity, counting stashed pages free
+            free_on = (
+                int(pool_free_units(on, t_on).sum())
+                + int(mag_total(m_on))
+            )
+            assert free_on == int(pool_free_units(off, t_off).sum())
+            if wave % 2 == 1:  # free the two oldest waves
+                for _ in range(2):
+                    n1, s1, ok1 = held_on.pop(0)
+                    t_on, m_on, _, _ = pool_wavefront_free_mag(
+                        on, t_on, m_on, n1, s1, ok1,
+                        jnp.arange(K, dtype=jnp.int32),
+                    )
+                    n2, s2, ok2 = held_off.pop(0)
+                    from repro.core.pool import pool_wavefront_free
+
+                    t_off, _, _ = pool_wavefront_free(
+                        off, t_off, n2, s2, ok2
+                    )
+        # drain everything: both sides fully coalesced
+        for n1, s1, ok1 in held_on:
+            t_on, m_on, _, _ = pool_wavefront_free_mag(
+                on, t_on, m_on, n1, s1, ok1,
+                jnp.arange(K, dtype=jnp.int32),
+            )
+        t_on, m_on, _ = pool_magazine_drain(on, t_on, m_on)
+        assert int(pool_free_units(on, t_on).sum()) == total
+
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_exhaustion_spills_magazines_back(self, name, layout):
+        """A pool whose free capacity is entirely parked in magazines
+        must still serve a magazine-less lane: one merged spill-back
+        replenishes the tree and the failed lanes retry."""
+        on, _ = _pair(3, 1, layout, False, mag_cap=8)
+        K = 8
+        trees, mags = on.empty_trees(), pool_init_magazines(on, 1)
+        trees, mags, nodes, shard, ok, _ = _leaf_alloc_mag(
+            on, trees, mags, [True] * K, list(range(K)), [0] * K
+        )
+        assert bool(ok.all())
+        trees, mags, _, _ = pool_wavefront_free_mag(
+            on, trees, mags, nodes, shard, ok,
+            jnp.zeros(K, jnp.int32),
+        )
+        assert int(mag_total(mags)) == K
+        assert int(pool_free_units(on, trees).sum()) == 0
+        # lane with no magazine: only the spill-back can serve it
+        trees, mags, _, _, ok2, st = _leaf_alloc_mag(
+            on, trees, mags, [True] * 4, list(range(4)), [-1] * 4
+        )
+        assert bool(ok2.all())
+        assert int(st["magazine_hits"]) == 0
+        assert int(st["magazine_spills"]) == K
+        assert int(mag_total(mags)) == 0
+
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_unowned_handles_never_stash(self, name, layout):
+        """Freeing a handle the pool does not mark allocated must not
+        park it in a magazine (a stashed junk page would later be
+        'recycled' into a double allocation)."""
+        on, _ = _pair(4, 2, layout, False)
+        trees, mags = on.empty_trees(), pool_init_magazines(on, 2)
+        total = int(pool_free_units(on, trees).sum())
+        lo = 1 << on.tree.depth
+        # never-allocated leaf + out-of-range node + junk shard
+        nodes = jnp.asarray([lo + 3, 2, lo + 1], jnp.int32)
+        shard = jnp.asarray([0, 0, 9], jnp.int32)
+        trees, mags, freed, _ = pool_wavefront_free_mag(
+            on, trees, mags, nodes, shard, jnp.ones(3, bool),
+            jnp.zeros(3, jnp.int32),
+        )
+        assert int(mag_total(mags)) == 0
+        assert int(pool_free_units(on, trees).sum()) == total
+
+    @pytest.mark.parametrize("name,layout", LAYOUTS)
+    def test_duplicate_burst_stashes_once(self, name, layout):
+        """Duplicate instances of one page in a single burst: exactly
+        one may stash, and the duplicates must not also free the page
+        through the tree (stash + tree-free = capacity forgery)."""
+        on, _ = _pair(4, 1, layout, False)
+        total = int(pool_free_units(on, on.empty_trees()).sum())
+        trees, mags = on.empty_trees(), pool_init_magazines(on, 4)
+        trees, mags, nodes, shard, ok, _ = _leaf_alloc_mag(
+            on, trees, mags, [True] * 2, [0, 1], [0, 1]
+        )
+        burst_nodes = jnp.asarray(
+            [int(nodes[0])] * 3 + [int(nodes[1])], jnp.int32
+        )
+        burst_shard = jnp.asarray([int(shard[0])] * 3 + [int(shard[1])],
+                                  jnp.int32)
+        trees, mags, _, _ = pool_wavefront_free_mag(
+            on, trees, mags, burst_nodes, burst_shard,
+            jnp.ones(4, bool), jnp.asarray([0, 1, 2, 3], jnp.int32),
+        )
+        assert int(mag_total(mags)) == 2  # one instance each, no dups
+        assert (
+            int(pool_free_units(on, trees).sum()) + int(mag_total(mags))
+            == total
+        )
+
+    def test_refill_batches_into_magazines(self):
+        on, _ = _pair(4, 1, UNPACKED, False, mag_cap=4, refill=2)
+        total = int(pool_free_units(on, on.empty_trees()).sum())
+        trees, mags = on.empty_trees(), pool_init_magazines(on, 3)
+        trees, mags, st = pool_magazine_refill(
+            on, trees, mags, jnp.ones(3, bool)
+        )
+        assert int(st["magazine_refills"]) == 6  # 3 lanes x batch 2
+        assert int(mag_total(mags)) == 6
+        assert (
+            int(pool_free_units(on, trees).sum()) + int(mag_total(mags))
+            == total
+        )
+        # refill respects remaining room: a second burst on lane 0 only
+        trees, mags, st2 = pool_magazine_refill(
+            on, trees, mags, jnp.asarray([True, False, False])
+        )
+        assert int(st2["magazine_refills"]) == 2
+        assert int(mags.depth[0]) == 4  # clipped at mag_cap
+        with pytest.raises(ValueError):
+            on2, _ = _pair(4, 1, UNPACKED, False, refill=0)
+            pool_magazine_refill(
+                on2, on2.empty_trees(), pool_init_magazines(on2, 1),
+                jnp.ones(1, bool),
+            )
+
+
+class TestMagazineKernelParity:
+    """The ops driver must produce identical results whether the pool
+    step runs through the Pallas kernel (interpret mode) or the pure
+    reference — magazines fused around the per-shard launches."""
+
+    @pytest.mark.parametrize(
+        "name,layout,fp",
+        [
+            ("unpacked", UNPACKED, False),
+            ("unpacked", UNPACKED, True),
+            ("bunch-packed", BUNCH_PACKED, False),
+        ],
+    )
+    def test_step_parity(self, name, layout, fp):
+        from repro.kernels.ops import nbbs_pool_wavefront_step
+        from repro.obs.schema import POOL_STEP_SLOTS
+
+        on, _ = _pair(4, 2, layout, fp)
+        K = 6
+        lanes = jnp.arange(K, dtype=jnp.int32)
+        mag_lane = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+        levels = jnp.full((K,), on.tree.depth, jnp.int32)
+
+        def drive(impl):
+            trees = on.empty_trees()
+            mags = pool_init_magazines(on, 3)
+            # warm the magazines: alloc one wave, free it into the
+            # stash pre-pass of a mixed release+alloc step
+            trees, mags, n0, s0, ok0, _ = _leaf_alloc_mag(
+                on, trees, mags, [True] * K, list(range(K)),
+                mag_lane.tolist(),
+            )
+            return nbbs_pool_wavefront_step(
+                on, trees, n0, s0, ok0, levels,
+                lane_ids=lanes, impl=impl,
+                mags=mags, free_mag_lane=mag_lane,
+                alloc_mag_lane=mag_lane,
+            )
+
+        t_r, m_r, n_r, s_r, ok_r, st_r = drive("reference")
+        t_k, m_k, n_k, s_k, ok_k, st_k = drive("interpret")
+        assert n_r.tolist() == n_k.tolist()
+        assert s_r.tolist() == s_k.tolist()
+        assert ok_r.tolist() == ok_k.tolist()
+        assert int(mag_total(m_r)) == int(mag_total(m_k))
+        assert (
+            pool_free_units(on, t_r).tolist()
+            == pool_free_units(on, t_k).tolist()
+        )
+        for slot in (
+            "magazine_hits", "magazine_spills", "magazine_refills",
+            "fastpath_hits", "freed",
+        ):
+            assert int(st_r[slot]) == int(st_k[slot]), slot
+        assert set(POOL_STEP_SLOTS) <= set(st_k)
+
+
+class TestManagerMagazines:
+    """Host mirror: PagedKVManager with per-(lane,shard) magazines."""
+
+    def test_recycle_hit_and_conservation(self):
+        from repro.memory.kv_cache import PagedKVManager
+
+        kv = PagedKVManager(
+            64, 16, n_shards=2, fastpath=True, magazines=4, mag_lanes=4
+        )
+        assert kv.add_sequence(7, 16)
+        kv.free_sequence(7)
+        assert kv.mag_stashed() == 1
+        assert kv.free_pages() == 64  # stashed page counts as free
+        assert kv.add_sequence(7, 16)
+        assert kv.magazine_hits == 1
+        assert kv.mag_stashed() == 0
+        frag = kv.fragmentation()
+        for key in ("magazine_hits", "magazine_spills",
+                    "magazine_refills", "magazine_stashed"):
+            assert key in frag
+
+    def test_append_rollback_mirrors_pr1_leak_test(self):
+        """The PR 1 regression, magazines on: a failed grow releases
+        runs appended by earlier iterations of the same call and the
+        observable state is exactly as before."""
+        from repro.memory.kv_cache import PagedKVManager
+
+        kv = PagedKVManager(
+            16, 1, max_run_pages=2, magazines=4, mag_lanes=2
+        )
+        assert kv.add_sequence(1, 2)
+        assert kv.add_sequence(2, 8)
+        assert kv.add_sequence(3, 4)
+        assert kv.free_pages() == 2
+        assert not kv.append_tokens(1, 6)
+        s = kv.seqs[1]
+        assert s.n_tokens == 2 and s.n_pages == 2
+        assert kv.free_pages() == 2
+        kv.free_sequence(2)
+        kv.free_sequence(3)
+        assert kv.append_tokens(1, 6)
+
+    def test_rollback_returns_magazine_page_to_same_lane(self):
+        """Satellite regression: a partial growth that consumed a
+        magazine-claimed page must put it back on the *same lane's*
+        magazine — not leak it into the shared tree — leaving both the
+        magazine and the tree exactly as before the failed call."""
+        from repro.memory.kv_cache import PagedKVManager
+
+        kv = PagedKVManager(
+            4, 1, max_run_pages=1, magazines=4, mag_lanes=1
+        )
+        assert kv.add_sequence(0, 1)
+        assert kv.add_sequence(1, 1)
+        assert kv.add_sequence(2, 1)
+        kv.free_sequence(2)             # parks one page in lane 0's mag
+        assert kv.mag_stashed() == 1
+        stashed_page = kv._mags[0][0][-1]
+        free_before = kv.free_pages()
+        # grow needs 3 pages: magazine pop + tree page, then failure
+        assert not kv.append_tokens(0, 3)
+        assert kv.seqs[0].n_tokens == 1 and kv.seqs[0].n_pages == 1
+        assert kv.free_pages() == free_before
+        assert stashed_page in kv._mags[0][0]  # back on its own lane
+        # the rolled-back tree page stashes too (uniform free policy):
+        # both rollback pages sit in lane 0's magazine, none leaked
+        assert kv.mag_stashed() == 2
+        # nothing leaked: everything is still admissible
+        kv.free_sequence(0)
+        kv.free_sequence(1)
+        assert kv.free_pages() == 4
+        assert kv.add_sequence(9, 4)  # full capacity reclaimable
+
+    def test_admission_spills_magazines_when_full(self):
+        """All capacity parked across two lanes' magazines: a full-pool
+        admission on one lane pops its own magazine, runs out, and can
+        only fit after the add_sequence spill-retry releases the other
+        lane's stash back to the tree."""
+        from repro.memory.kv_cache import PagedKVManager
+
+        kv = PagedKVManager(4, 1, max_run_pages=1, magazines=4,
+                            mag_lanes=2)
+        for i in range(4):
+            assert kv.add_sequence(i, 1)
+        kv.free_sequences([0, 1, 2, 3])
+        assert kv.mag_stashed() == 4  # all capacity parked
+        assert kv.add_sequence(8, 4)  # lane 0: 2 pops, then spill-retry
+        assert kv.magazine_hits == 2
+        assert kv.magazine_spills >= 2
+        assert kv.mag_stashed() == 0
+        assert kv.free_pages() == 0
+
+    def test_device_pool_config_threads_magazines(self):
+        from repro.memory.kv_cache import PagedKVManager
+
+        kv = PagedKVManager(64, 16, n_shards=2, magazines=4,
+                            magazine_refill=2)
+        pcfg = kv.device_pool_config()
+        assert pcfg.magazines is not None
+        assert pcfg.magazines.mag_cap == 4
+        assert pcfg.magazines.refill_batch == 2
+        assert PagedKVManager(64, 16).device_pool_config().magazines is None
+
+
+class TestOracleMagazines:
+    """PageOracle mirrors the device claim/stash/spill exactly."""
+
+    def test_claim_stash_lifo_and_duplicates(self):
+        from repro.memory.kv_cache import PageOracle
+
+        o = PageOracle(16, 16, magazines=4, mag_lanes=2)
+        got = o.alloc_wavefront(
+            [(k, k) for k in range(4)], mag_lanes=[0, 0, 1, 1]
+        )
+        pages = [got[k] for k in range(4)]
+        o.free_burst(pages, stash_lanes=[0, 0, 1, 1])
+        assert o.mag_stashed() == 4
+        assert o.free_pages() == 16
+        # duplicate instances: stash once, never double-free
+        o2 = PageOracle(16, 16, magazines=4, mag_lanes=2)
+        g = o2.alloc_wavefront([(0, 0)], mag_lanes=[0])
+        p = g[0]
+        o2.free_burst([p, p, p], stash_lanes=[0, 1, -1])
+        assert o2.mag_stashed() == 1
+        assert o2.free_pages() == 16
+        o2.check_invariants()
+
+    def test_exhaustion_spill_back(self):
+        from repro.memory.kv_cache import PageOracle
+
+        o = PageOracle(8, 16, magazines=8, mag_lanes=1)
+        got = o.alloc_wavefront(
+            [(k, k) for k in range(8)], mag_lanes=[0] * 8
+        )
+        o.free_burst(list(got.values()), stash_lanes=[0] * 8)
+        assert o.mag_stashed() == 8
+        got2 = o.alloc_wavefront([(k, 50 + k) for k in range(4)])
+        assert all(v is not None for v in got2.values())
+        assert o.magazine_spills == 8
+        assert o.mag_stashed() == 0
+
+
+class TestMagazineEngine:
+    """Trace-replay regressions: the jit-resident engine with magazines
+    on must stay step-exact vs the host oracle, and must emit the same
+    tokens as itself with magazines off (recycling is a pure mechanism
+    change on capacity-sufficient traces)."""
+
+    @classmethod
+    def setup_class(cls):
+        from repro.configs import get_config
+        from repro.models import init_params
+
+        cls.cfg = get_config("stablelm-3b").reduced()
+        cls.params = init_params(cls.cfg, jax.random.PRNGKey(0))
+
+    def _engine(self, **kw):
+        from repro.serve.jit_engine import JitServeEngine
+
+        base = dict(
+            num_pages=16, page_tokens=4, max_batch=4, max_lane_pages=8,
+            max_out=16, dtype=jnp.float32,
+        )
+        base.update(kw)
+        return JitServeEngine(self.cfg, self.params, **base)
+
+    @staticmethod
+    def _trace(seed, vocab, n=8):
+        rng = np.random.default_rng(seed)
+        return [
+            (
+                i,
+                rng.integers(
+                    0, vocab, size=int(rng.integers(1, 14))
+                ).astype(np.int32),
+                int(rng.integers(1, 8)),
+            )
+            for i in range(n)
+        ]
+
+    @pytest.mark.parametrize(
+        "n_shards,layout", [(1, "unpacked"), (2, "bunch-packed")]
+    )
+    def test_matches_host_oracle_with_magazines(self, n_shards, layout):
+        from repro.serve.engine import Request
+        from repro.serve.oracle import HostOracleEngine
+
+        eng = self._engine(
+            n_shards=n_shards, layout=layout, magazines=4
+        )
+        orc = HostOracleEngine(
+            num_pages=16, page_tokens=4, max_batch=4, max_lane_pages=8,
+            max_out=16, n_shards=n_shards, magazines=4,
+        )
+        for i, p, mn in self._trace(3 * n_shards, self.cfg.vocab_size):
+            eng.submit(Request(i, p, mn))
+            orc.submit(Request(i, p.copy(), mn))
+        for _ in range(100):
+            eng._drain(), eng._admit()
+            orc._drain(), orc._admit()
+            assert sorted(eng.running) == sorted(orc.running)
+            if not eng.running and not eng.waiting:
+                break
+            for sid in eng.running:
+                assert (
+                    eng.device_block_table(sid) == orc.block_table(sid)
+                ).all(), sid
+            assert eng.device_free_pages() == orc.free_pages()
+            eng.decode_steps(1)
+            orc.decode_steps(1)
+        assert eng.retired_order == orc.retired_order
+        assert eng.done_steps == orc.done_steps
+        assert eng.device_free_pages() == orc.free_pages() == 16
+        tot, otot = eng.stat_totals(), orc.stat_totals()
+        for key in (
+            "magazine_hits", "magazine_spills", "magazine_refills",
+            "fastpath_hits", "fastpath_spills",
+            "admitted", "overflow_retired",
+        ):
+            assert tot[key] == otot[key], key
+        orc.pool.check_invariants()
+
+    def test_magazines_on_off_token_exact(self):
+        """Recycling must not change what the engine computes: with
+        magazines on or off the engine emits the same tokens and the
+        same retirement schedule on a capacity-sufficient trace (block
+        tables legitimately differ — recycled pages come back LIFO)."""
+        from repro.serve.engine import Request
+
+        e_on = self._engine(n_shards=2, magazines=4)
+        e_off = self._engine(n_shards=2)
+        for i, p, mn in self._trace(5, self.cfg.vocab_size):
+            e_on.submit(Request(i, p, mn))
+            e_off.submit(Request(i, p.copy(), mn))
+        for _ in range(100):
+            e_on._drain(), e_on._admit()
+            e_off._drain(), e_off._admit()
+            assert sorted(e_on.running) == sorted(e_off.running)
+            if not e_on.running and not e_on.waiting:
+                break
+            assert e_on.device_free_pages() == e_off.device_free_pages()
+            e_on.decode_steps(1)
+            e_off.decode_steps(1)
+        assert e_on.retired_order == e_off.retired_order
+        assert e_on.done_steps == e_off.done_steps
+        for sid in e_on.completed:
+            assert (
+                e_on.completed[sid].out_tokens
+                == e_off.completed[sid].out_tokens
+            )
+        assert e_on.stat_totals()["magazine_hits"] > 0
+        assert e_off.stat_totals()["magazine_hits"] == 0
+
+    def test_overflow_trace_with_magazines(self):
+        """A trace that overflows the pool retires the same sequences
+        the same way with magazines on: the exhaustion spill-back keeps
+        failure semantics magazines-off-equivalent."""
+        from repro.serve.engine import Request
+        from repro.serve.oracle import HostOracleEngine
+
+        kw = dict(num_pages=4, page_tokens=2, max_batch=2,
+                  max_lane_pages=4, max_out=8)
+        eng = self._engine(magazines=2, **kw)
+        orc = HostOracleEngine(magazines=2, **kw)
+        rng = np.random.default_rng(7)
+        for i in range(6):
+            p = rng.integers(
+                0, self.cfg.vocab_size, int(rng.integers(1, 5))
+            ).astype(np.int32)
+            mn = int(rng.integers(2, 8))
+            eng.submit(Request(i, p, mn))
+            orc.submit(Request(i, p.copy(), mn))
+        eng.run_to_completion(max_steps=200)
+        orc.run_to_completion(max_steps=200)
+        assert eng.retired_order == orc.retired_order
+        assert eng.done_steps == orc.done_steps
+        assert (
+            eng.stat_totals()["overflow_retired"]
+            == orc.stats["overflow_retired"]
+        )
+        assert eng.device_free_pages() == orc.free_pages() == 4
+        orc.pool.check_invariants()
+
+    def test_magazine_step_adds_no_host_sync(self):
+        """The magazine claim/stash lives inside the compiled step:
+        the decode loop stays transfer-free and re-trace-free."""
+        from repro.serve import jit_engine as je
+        from repro.serve.engine import Request
+
+        eng = self._engine(magazines=4, fastpath=True, ring_capacity=16)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(
+                i,
+                rng.integers(0, self.cfg.vocab_size, 6).astype(np.int32),
+                8,
+            ))
+        eng._drain(), eng._admit()
+        eng.decode_steps(1)  # trace both step shapes outside the guard
+        eng.decode_steps(2)
+        traced = je.TRACE_COUNTS[eng.ecfg]
+        with jax.transfer_guard("disallow"):
+            for _ in range(4):
+                eng.decode_steps(1)
+                eng.decode_steps(2)
+        assert je.TRACE_COUNTS[eng.ecfg] == traced
+        eng._drain()
+        assert eng.stat_totals()["magazine_hits"] >= 0

@@ -58,7 +58,8 @@ class TestSchema:
             "free_merged_writes", "free_logical_rmws", "freed",
         )
         assert osch.POOL_STEP_SLOTS == osch.WAVEFRONT_STEP_SLOTS + (
-            "fastpath_hits",
+            "fastpath_hits", "magazine_hits", "magazine_spills",
+            "magazine_refills",
         )
         for slots in (osch.WAVEFRONT_ALLOC_SLOTS,
                       osch.WAVEFRONT_STEP_SLOTS, osch.POOL_STEP_SLOTS):

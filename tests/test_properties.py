@@ -528,3 +528,103 @@ def test_jit_engine_matches_host_oracle(trace):
     assert eng.stats == orc.stats
     assert eng.device_free_pages() == orc.free_pages() == 16
     orc.pool.check_invariants()
+
+
+@given(
+    op_stream(30),
+    st.sampled_from([1, 4]),
+    st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+@pytest.mark.magazine
+def test_magazine_pool_safety_on_any_trace(ops, S, seed):
+    """Magazine safety (S1/S2 with lane-local recycling in the loop):
+    random interleaved alloc/free traces where frees stash into random
+    lanes' magazines never hand the same (shard, node) to two live
+    owners — a popped page cannot alias a tree/slab grant because a
+    stashed page stays marked allocated in its tree — conserve units as
+    `pool_free_units + mag_total + live == total` after every burst,
+    and draining every magazine restores the exact magazines-off
+    baseline."""
+    from repro.core.magazine import MagazineConfig, mag_total
+    from repro.core.pool import (
+        pool_free_units,
+        pool_init_magazines,
+        pool_magazine_drain,
+        pool_wavefront_alloc_mag,
+        pool_wavefront_free_mag,
+    )
+
+    depth, L = 4, 4
+    pcfg = PoolConfig(
+        TreeConfig(depth=depth), S,
+        magazines=MagazineConfig(mag_cap=3),
+    )
+    trees = pcfg.empty_trees()
+    mags = pool_init_magazines(pcfg, L)
+    baseline = np.asarray(pcfg.empty_trees())
+    total = S << depth
+    rng = np.random.default_rng(seed)
+    live = {}  # (shard, node) -> units
+    for is_alloc, r in ops:
+        if not is_alloc and live:
+            k = 1 + r % len(live)
+            keys = list(live)
+            idx = rng.choice(len(keys), size=k, replace=False)
+            sel = [keys[i] for i in idx]
+            fn = jnp.asarray([n for _, n in sel], jnp.int32)
+            fs = jnp.asarray([s for s, _ in sel], jnp.int32)
+            ml = jnp.asarray(
+                rng.integers(-1, L, size=k), jnp.int32
+            )  # -1 opts out of stashing
+            trees, mags, freed, _ = pool_wavefront_free_mag(
+                pcfg, trees, mags, fn, fs, jnp.ones(k, bool), ml
+            )
+            assert bool(freed.all())  # stashed or released, never lost
+            for key in sel:
+                del live[key]
+        else:
+            K = 1 + r % 6
+            # bias toward the leaf octave so magazines stay hot, with
+            # coarse chunks mixed in (those bypass the magazines)
+            lv = jnp.asarray(
+                [
+                    depth if (r >> i) & 1 else 2 + (r >> (2 * i)) % 3
+                    for i in range(K)
+                ],
+                jnp.int32,
+            )
+            ids = jnp.asarray(rng.integers(0, 1000, size=K), jnp.int32)
+            ml = jnp.asarray(rng.integers(-1, L, size=K), jnp.int32)
+            trees, mags, nodes, shard, ok, _ = pool_wavefront_alloc_mag(
+                pcfg, trees, mags, lv, jnp.ones(K, bool), 64, ids, ml
+            )
+            for n, s, o, lvl in zip(
+                np.asarray(nodes), np.asarray(shard), np.asarray(ok),
+                np.asarray(lv),
+            ):
+                if not o:
+                    continue
+                key = (int(s), int(n))
+                assert key not in live, "magazine double allocation!"
+                level = int(n).bit_length() - 1
+                assert level == int(lvl)
+                live[key] = (1 << depth) >> level
+        # conservation: tree-free + stashed + live covers every unit
+        assert (
+            int(pool_free_units(pcfg, trees).sum())
+            + int(mag_total(mags))
+            + sum(live.values())
+            == total
+        )
+    if live:
+        fn = jnp.asarray([n for _, n in live], jnp.int32)
+        fs = jnp.asarray([s for s, _ in live], jnp.int32)
+        trees, mags, freed, _ = pool_wavefront_free_mag(
+            pcfg, trees, mags, fn, fs, jnp.ones(len(live), bool),
+            jnp.full(len(live), -1, jnp.int32),
+        )
+        assert bool(freed.all())
+    trees, mags, _ = pool_magazine_drain(pcfg, trees, mags)
+    assert int(mag_total(mags)) == 0
+    assert (np.asarray(trees) == baseline).all()

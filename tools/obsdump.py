@@ -79,6 +79,9 @@ def self_test() -> int:
             "steps": 8, "alloc_pages": 6, "freed_pages": 6,
             "free_pages": 64, "active_lanes": 0,
             "merged_writes": 40, "logical_rmws": 66,
+            "fastpath_hits": 3, "fastpath_spills": 1,
+            "magazine_hits": 4, "magazine_spills": 1,
+            "magazine_refills": 2,
             "ring_events": 8, "ring_dropped": 0,
             "alloc_rounds_hist": [2, 4, 2, 0, 0, 0, 0, 0],
         },
@@ -108,8 +111,22 @@ def self_test() -> int:
     assert n_steps == 8, f"expected 8 step spans, got {n_steps}"
     counters = [e for e in trace["traceEvents"] if e["ph"] == "C"]
     assert counters, "expected counter tracks"
+    # the extended kernel stat slots (fastpath + magazine counters)
+    # must be registered and render through the metric table
+    import contextlib
+    import io
+
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        dump_metrics(snap)
+    table = buf.getvalue()
+    for name in ("fastpath_hits", "magazine_hits", "magazine_spills",
+                 "magazine_refills"):
+        spec(name)  # registered in the schema
+        assert name in table, f"metric table missing {name}"
     print(f"self-test ok: {len(trace['traceEvents'])} trace events, "
-          f"{n_steps} step spans, {len(counters)} counter samples")
+          f"{n_steps} step spans, {len(counters)} counter samples, "
+          f"magazine counters rendered")
     return 0
 
 
